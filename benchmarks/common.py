@@ -1,0 +1,60 @@
+"""Shared benchmark utilities.
+
+Two kinds of numbers appear in every table:
+  * ``us_per_call`` — measured wall time of the jitted function on THIS
+    host (CPU; Pallas kernels run in interpret mode). Only *relative*
+    comparisons are meaningful — interpret mode is a correctness vehicle.
+  * ``derived``     — the v5e roofline model for the same operation
+    (bytes/point, transactions, flops), which is the number the paper's
+    tables are compared against. Modeling constants live in repro.roofline.
+
+CSV convention (required by the harness): ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.roofline import V5E
+
+# VPU (vector unit) throughput assumption for non-matmul stencil math on
+# v5e: 8 lanes x 128 sublanes? -- we use 1/50 of MXU bf16 peak, the usual
+# planning number for elementwise f32 work.
+VPU_FLOPS = V5E["peak_flops"] / 50.0  # ~3.9 TFLOP/s
+HBM_BW = V5E["hbm_bw"]
+TXN_OVERHEAD_S = 1e-6   # per-DMA-descriptor issue cost model
+CHIP_WATTS = V5E["tdp_watts"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def model_stream_time(bytes_total: int, n_txn: int) -> float:
+    """v5e time model for a strided copy: bandwidth + descriptor issue."""
+    return max(bytes_total / HBM_BW, n_txn * TXN_OVERHEAD_S) + \
+        min(bytes_total / HBM_BW, n_txn * TXN_OVERHEAD_S) * 0.0
+
+
+def model_jacobi_gpts(bytes_per_point: float, flops_per_point: float = 5.0,
+                      chips: int = 1) -> float:
+    """Modeled Jacobi throughput (GPt/s) on v5e: min(bandwidth, VPU)."""
+    bw_pts = HBM_BW / max(bytes_per_point, 1e-9)
+    vpu_pts = VPU_FLOPS / flops_per_point
+    return chips * min(bw_pts, vpu_pts) / 1e9

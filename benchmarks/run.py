@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table. Prints CSV:
+``name,us_per_call,derived``. Run: PYTHONPATH=src python -m benchmarks.run
+(optionally ``--only table3``)."""
+import argparse
+import sys
+import time
+
+TABLES = [
+    ("table1_versions", "Table I: Jacobi kernel generations"),
+    ("table2_components", "Table II: component ablation"),
+    ("table3_access_contig", "Table III: contiguous access sweep"),
+    ("table4_access_noncontig", "Table IV: non-contiguous access sweep"),
+    ("table5_replication", "Table V: replicated reads"),
+    ("table6_interleave", "Table VI: layout/interleaving analogue"),
+    ("table7_core_scaling", "Table VII: multi-core/chip scaling"),
+    ("table8_comparison", "Table VIII: performance & energy comparison"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for mod_name, title in TABLES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# === {title} ({mod_name}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # report, keep going
+            failures += 1
+            print(f"{mod_name}_FAILED,0.0,{e!r}", flush=True)
+        print(f"# ({time.time() - t0:.1f}s)", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Table I analogue — Jacobi kernel generations on one core/chip.
+
+Paper (one Tensix core, 512x512, BF16):  CPU 1C 1.41 GPt/s; initial 0.0065;
+write-optimised 0.0072; double-buffered 0.0140 GPt/s. The 163x gap between
+the initial and optimised (§VI: 1.06) versions is the paper's core story.
+
+Here: same grid, our kernel generations. ``us_per_call`` is CPU interpret
+wall time (relative); ``derived`` is modeled v5e GPt/s from per-version
+bytes/point (the architecture story transfers: v0's replicated shifted
+reads cost ~5x the traffic of v1's single pass; v2 divides traffic by T).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil import make_laplace_problem
+from repro.kernels import ops
+from benchmarks.common import time_fn, row, model_jacobi_gpts
+
+GRID = (512, 512)
+DTYPE = jnp.bfloat16
+
+# bytes per interior point per sweep (read + write, bf16=2B)
+BYTES_PER_POINT = {
+    "ref": 2 * (1 + 1),          # XLA-fused single pass
+    "v0": 2 * (5 + 1),           # 4 shifted copies materialized + out (+in)
+    "v1": 2 * (1 + 1),           # single contiguous pass + halo (amortized)
+    "v1db": 2 * (1 + 1),
+    "v2_t8": 2 * (1 + 1) / 8.0,  # temporal blocking: T sweeps per pass
+}
+
+
+def run():
+    rows = []
+    u = make_laplace_problem(*GRID, dtype=DTYPE)
+    u = u.at[1:-1, 1:-1].set(
+        jax.random.uniform(jax.random.PRNGKey(0), GRID, jnp.float32)
+        .astype(DTYPE))
+    npts = GRID[0] * GRID[1]
+
+    for name, version, kw in [
+        ("jacobi_ref", "ref", {}),
+        ("jacobi_v0_shifted", "v0", {}),
+        ("jacobi_v1_rowchunk", "v1", {}),
+        ("jacobi_v1_dbuf", "v1db", {}),
+        ("jacobi_v2_temporal_t8", "v2", {"t": 8}),
+    ]:
+        fn = jax.jit(lambda x, v=version, k=kw: ops.jacobi_step(
+            x, version=v, bm=64, interpret=True, **k))
+        t = time_fn(fn, u, warmup=1, iters=3)
+        sweeps = kw.get("t", 1)
+        key = {"v2": "v2_t8"}.get(version, version)
+        gpts = model_jacobi_gpts(BYTES_PER_POINT[key])
+        rows.append(row(name, t / sweeps * 1e6,
+                        f"model_v5e_GPt/s={gpts:.2f}"))
+    # paper reference points for the table
+    rows.append(row("paper_e150_initial", 0.0, "paper_GPt/s=0.0065"))
+    rows.append(row("paper_e150_dbuf", 0.0, "paper_GPt/s=0.0140"))
+    rows.append(row("paper_e150_optimised", 0.0, "paper_GPt/s=1.06"))
+    rows.append(row("paper_cpu_1core", 0.0, "paper_GPt/s=1.41"))
+    return rows

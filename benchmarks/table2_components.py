@@ -1,0 +1,85 @@
+"""Paper Table II analogue — component ablation (read/memcpy/compute/write).
+
+The paper deactivates parts of the Tensix pipeline to locate the
+bottleneck (answer: SRAM memcpy by the data mover, 0.014 GPt/s, vs compute
+1.387 GPt/s). Our analogue ablates the v1 kernel pipeline: DMA-only,
+compute-only (data resident), full; plus the v0 "extra copies" design
+standing in for the memcpy-bound initial version.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stencil import make_laplace_problem
+from benchmarks.common import time_fn, row, model_jacobi_gpts, HBM_BW
+
+GRID = (512, 512)
+DTYPE = jnp.bfloat16
+
+
+def _dma_only_kernel(u_hbm, o_ref, scratch, sem, *, bm):
+    i = pl.program_id(0)
+    cp = pltpu.make_async_copy(u_hbm.at[pl.ds(i * bm, bm + 2), :], scratch, sem)
+    cp.start()
+    cp.wait()
+    o_ref[...] = scratch[1:-1, 1:-1]  # move, no math
+
+
+def _compute_only_kernel(x_ref, o_ref):
+    c = x_ref[...].astype(jnp.float32)
+    # same math as the jacobi sweep, operands already resident
+    o_ref[...] = ((c + c + c + c) * 0.25).astype(o_ref.dtype)
+
+
+def dma_only(u, bm=64, interpret=True):
+    h, w = u.shape
+    hi, wi = h - 2, w - 2
+    return pl.pallas_call(
+        functools.partial(_dma_only_kernel, bm=bm),
+        grid=(hi // bm,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, wi), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hi, wi), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bm + 2, w), u.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(u)
+
+
+def compute_only(u, bm=64, interpret=True):
+    h, w = u.shape
+    spec = pl.BlockSpec((bm, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _compute_only_kernel, grid=(h // bm,),
+        in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(u)
+
+
+def run():
+    rows = []
+    u = make_laplace_problem(*GRID, dtype=DTYPE)
+    npts = GRID[0] * GRID[1]
+
+    t = time_fn(jax.jit(lambda x: dma_only(x)), u, warmup=1, iters=3)
+    rows.append(row("dma_only", t * 1e6,
+                    f"model_v5e_GPt/s={model_jacobi_gpts(4.0, 0.01):.2f}"))
+    t = time_fn(jax.jit(lambda x: compute_only(x)), u, warmup=1, iters=3)
+    rows.append(row("compute_only", t * 1e6,
+                    f"model_v5e_GPt/s={model_jacobi_gpts(0.02, 5.0):.2f}"))
+    from repro.kernels import ops
+    t = time_fn(jax.jit(lambda x: ops.jacobi_step(
+        x, version="v1", bm=64, interpret=True)), u, warmup=1, iters=3)
+    rows.append(row("full_v1", t * 1e6,
+                    f"model_v5e_GPt/s={model_jacobi_gpts(4.0, 5.0):.2f}"))
+    # paper reference rows (GPt/s on one Tensix core)
+    rows.append(row("paper_none", 0.0, "paper_GPt/s=7.574"))
+    rows.append(row("paper_compute_only", 0.0, "paper_GPt/s=1.387"))
+    rows.append(row("paper_write_only", 0.0, "paper_GPt/s=0.278"))
+    rows.append(row("paper_read_only", 0.0, "paper_GPt/s=0.205"))
+    rows.append(row("paper_memcpy_only", 0.0, "paper_GPt/s=0.014"))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Table III analogue — contiguous access batch-size sweep.
+
+The paper streams 4096x4096 int32 through a Tensix core varying the DRAM
+request size (16KB..4B) with per-access vs per-row synchronization;
+performance collapses below ~1KB requests, and per-access sync costs up to
+7x. TPU analogue: blocked copy with block width bn controlling the HBM
+transaction span (full-width blocks = the paper's 16KB rows; narrow blocks
+= small strided transactions), plus the rowdma kernel's sync modes.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream import stream_copy, stream_copy_rowdma
+from benchmarks.common import (time_fn, row, HBM_BW, TXN_OVERHEAD_S)
+
+H, W = 1024, 1024  # int32 (CPU-interpret-sized; paper used 4096x4096)
+
+
+def run():
+    rows = []
+    x = jnp.arange(H * W, dtype=jnp.int32).reshape(H, W)
+    total_bytes = H * W * 4
+
+    for bn in (1024, 512, 256, 128, 32, 8):
+        fn = jax.jit(lambda v, b=bn: stream_copy(v, bm=256, bn=b,
+                                                 interpret=True))
+        t = time_fn(fn, x, warmup=1, iters=3)
+        n_txn = (H // 256) * (W // bn) * 256  # one row-segment per txn
+        model = max(total_bytes / HBM_BW, n_txn * TXN_OVERHEAD_S)
+        rows.append(row(f"copy_block_bn{bn}", t * 1e6,
+                        f"txn_bytes={bn*4};model_v5e_s={model:.5f}"))
+
+    for sync in (False, True):
+        fn = jax.jit(lambda v, s=sync: stream_copy_rowdma(
+            v, bm=64, sync=s, interpret=True))
+        t = time_fn(fn, x, warmup=1, iters=3)
+        n_txn = H
+        serial = n_txn * (TXN_OVERHEAD_S + (W * 4) / HBM_BW) if sync \
+            else max(total_bytes / HBM_BW, n_txn * TXN_OVERHEAD_S)
+        rows.append(row(f"rowdma_sync={sync}", t * 1e6,
+                        f"model_v5e_s={serial:.5f}"))
+    # paper reference (runtime seconds, 16KB vs 4B batches, read no-sync)
+    rows.append(row("paper_16KB_nosync", 0.0, "paper_s=0.011"))
+    rows.append(row("paper_4B_nosync", 0.0, "paper_s=1.761"))
+    rows.append(row("paper_4B_sync", 0.0, "paper_s=12.659"))
+    return rows

@@ -1,0 +1,37 @@
+"""Paper Table IV analogue — non-contiguous access sweep.
+
+The paper repeats Table III walking down columns (guaranteed
+non-contiguous); small-to-medium slowdown vs contiguous, growing as the
+batch shrinks. TPU analogue: tall-narrow blocks traverse the lane dim in
+short strided segments (the sub-512B HBM transaction regime) vs
+wide blocks; the transposed iteration order makes every block boundary a
+stride.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream import stream_copy
+from benchmarks.common import time_fn, row, HBM_BW, TXN_OVERHEAD_S
+
+H, W = 1024, 1024
+
+
+def run():
+    rows = []
+    x = jnp.arange(H * W, dtype=jnp.int32).reshape(H, W)
+    total_bytes = H * W * 4
+
+    # contiguous: wide blocks; non-contiguous: tall blocks of equal area
+    for (bm, bn) in ((64, 1024), (256, 256), (1024, 64), (1024, 8)):
+        fn = jax.jit(lambda v, a=bm, b=bn: stream_copy(v, bm=a, bn=b,
+                                                       interpret=True))
+        t = time_fn(fn, x, warmup=1, iters=3)
+        # each (row-segment) is one contiguous txn of bn*4 bytes
+        n_txn = (H // bm) * (W // bn) * bm
+        model = max(total_bytes / HBM_BW, n_txn * TXN_OVERHEAD_S)
+        shape_kind = "contig" if bn == W else "noncontig"
+        rows.append(row(f"copy_{bm}x{bn}_{shape_kind}", t * 1e6,
+                        f"txn_bytes={bn*4};model_v5e_s={model:.5f}"))
+    rows.append(row("paper_16KB_noncontig", 0.0, "paper_s=0.011"))
+    rows.append(row("paper_4B_noncontig", 0.0, "paper_s=1.969"))
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Table V analogue — replicated-read overhead.
+
+The paper re-reads each row n times (emulating the 4-CB shifted-copy
+design); overhead grows linearly with the factor (0.011s -> 0.185s at 32x).
+Same sweep with our replicated-read kernel; the v5e model is linear in the
+factor once bandwidth-bound, which is exactly the paper's lesson: serve
+offsets from resident data (v1's in-VMEM shifts), never by re-reading.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream import stream_replicated
+from benchmarks.common import time_fn, row, HBM_BW
+
+H, W = 1024, 1024
+
+
+def run():
+    rows = []
+    x = jnp.arange(H * W, dtype=jnp.int32).reshape(H, W).astype(jnp.float32)
+    total_bytes = H * W * 4
+    for factor in (1, 2, 4, 8, 16, 32):
+        fn = jax.jit(lambda v, f=factor: stream_replicated(
+            v, bm=128, factor=f, interpret=True))
+        t = time_fn(fn, x, warmup=1, iters=3)
+        model = factor * total_bytes / HBM_BW
+        rows.append(row(f"replicated_x{factor}", t * 1e6,
+                        f"model_v5e_s={model:.6f}"))
+    rows.append(row("paper_x1", 0.0, "paper_s=0.011"))
+    rows.append(row("paper_x32", 0.0, "paper_s=0.185"))
+    return rows

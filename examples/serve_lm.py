@@ -1,0 +1,26 @@
+"""Serve batched generation requests against a smoke model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine, Request
+
+cfg = configs.get_smoke_config("deepseek-7b")
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+requests = [Request(prompt=rng.integers(0, cfg.vocab_size, 12,
+                                        dtype=np.int32),
+                    max_new_tokens=16,
+                    temperature=0.0 if i % 2 == 0 else 0.8)
+            for i in range(6)]
+
+engine = ServeEngine(model, params, batch_size=3, max_len=64, rng_seed=0)
+for i, r in enumerate(engine.generate(requests)):
+    kind = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+    print(f"req{i} ({kind}): {r.generated}")

@@ -1,0 +1,35 @@
+"""Train a small LM end-to-end on the synthetic Markov corpus.
+
+Uses the qwen2.5 smoke architecture (~a few M params); loss drops well
+below the uniform baseline within ~60 steps on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.registry import build_model
+from repro.train import optimizer as O
+from repro.train.data import DataConfig, make_pipeline
+from repro.train.trainstep import make_train_step, TrainState
+
+cfg = configs.get_smoke_config("qwen2.5-3b")
+model = build_model(cfg)
+opt = O.adamw(O.warmup_cosine(3e-3, 10, 100))
+params, _ = model.init(jax.random.PRNGKey(0))
+state = TrainState(params, opt.init(params))
+step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+
+data = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                global_batch=8))
+for batch in data.batches():
+    if batch["step"] >= 60:
+        break
+    state, metrics = step(state, {"tokens": jnp.asarray(batch["tokens"]),
+                                  "labels": jnp.asarray(batch["labels"])})
+    if batch["step"] % 10 == 0:
+        print(f"step {batch['step']:3d}  ce={float(metrics['ce']):.4f} "
+              f"(uniform={np.log(cfg.vocab_size):.2f}, "
+              f"optimal={np.log(4):.2f})")

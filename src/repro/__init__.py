@@ -1,0 +1,5 @@
+"""repro: TPU-native reproduction of "Accelerating stencils on the
+Tenstorrent Grayskull RISC-V accelerator" (Brown & Barton, 2024), built as
+a multi-pod JAX framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "0.1.0"

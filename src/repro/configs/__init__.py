@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, ShapeCell, cell_supported, input_specs  # noqa: F401
+
+ARCHS = {
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).config()
+
+
+def get_smoke_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).smoke()
+
+
+def all_cells():
+    """Every (arch, shape) pair with its supported/skip status."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_supported(cfg, shape)
+            out.append((arch, shape, ok, why))
+    return out

@@ -1,0 +1,26 @@
+"""qwen3-moe-235b-a22b — 128 experts, top-8, per-expert ff 1536
+[hf:Qwen/Qwen3-30B-A3B family; hf]."""
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b", family="moe",
+        n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+        d_ff=1536, vocab_size=151936, head_dim=128,
+        n_experts=128, experts_per_token=8,
+        rope_theta=1_000_000.0,
+        param_dtype=jnp.bfloat16,  # 235B: bf16 params to fit 16 GB/chip
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=64, vocab_size=512, head_dim=16,
+        n_experts=8, experts_per_token=2, moe_group_size=64,
+        remat="none",
+    )

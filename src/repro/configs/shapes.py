@@ -1,0 +1,83 @@
+"""Assigned input-shape cells and per-cell input specs (ShapeDtypeStruct).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a KV/state
+cache of seq_len), not ``train_step``; skips follow DESIGN.md
+§Arch-applicability and are reported, not silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+_FULL_ATTN = ("dense", "moe", "vlm")
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not)."""
+    cell = SHAPES[shape]
+    if cfg.family == "encoder" and cell.kind == "decode":
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape == "long_500k" and cfg.family in _FULL_ATTN:
+        return False, ("500k decode needs sub-quadratic attention / O(1) "
+                       "state; full-attention KV cache is out of scope")
+    if shape == "long_500k" and cfg.family == "encoder":
+        return False, "encoder-only arch has no autoregressive decode step"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill the dict feeds the model directly; decode cells
+    additionally get their cache specs from ``model.init_cache`` via
+    ``jax.eval_shape`` in the launcher.
+    """
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.family == "encoder":
+        specs = {"features": sds((b, s, cfg.audio_feat_dim), jnp.bfloat16)}
+        if cell.kind == "train":
+            specs["labels"] = sds((b, s), i32)
+        return specs
+
+    if cell.kind == "decode":
+        return {"tokens": sds((b, 1), i32)}
+
+    if cfg.family == "vlm":
+        n_img = cfg.vlm_image_tokens
+        text = s - n_img
+        specs = {
+            "tokens": sds((b, text), i32),
+            "image_embeds": sds((b, n_img, cfg.vlm_vision_dim), jnp.bfloat16),
+        }
+        if cell.kind == "train":
+            specs["labels"] = sds((b, text), i32)
+        return specs
+
+    specs = {"tokens": sds((b, s), i32)}
+    if cell.kind == "train":
+        specs["labels"] = sds((b, s), i32)
+    return specs

@@ -1,0 +1,47 @@
+"""Domain decomposition bookkeeping for distributed stencils.
+
+A ringed grid ``(Hi+2, Wi+2)`` is split into
+
+  * ``interior``  (Hi, Wi)  — sharded over mesh axes,
+  * ``bc``        dict of four Dirichlet edge vectors (top/bottom: (Wi,),
+                  left/right: (Hi,)) — sharded along their own length.
+
+Corners of the ring are irrelevant for face-neighbour stencils and dropped.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def split_ringed(u: jax.Array):
+    """(Hi+2, Wi+2) ringed grid -> (interior, bc dict)."""
+    interior = u[1:-1, 1:-1]
+    bc = {
+        "top": u[0, 1:-1],
+        "bottom": u[-1, 1:-1],
+        "left": u[1:-1, 0],
+        "right": u[1:-1, -1],
+    }
+    return interior, bc
+
+
+def join_ringed(interior: jax.Array, bc: Dict[str, jax.Array],
+                corner: float = 0.0) -> jax.Array:
+    """Inverse of :func:`split_ringed` (corners filled with ``corner``)."""
+    hi, wi = interior.shape
+    u = jnp.full((hi + 2, wi + 2), corner, interior.dtype)
+    u = u.at[1:-1, 1:-1].set(interior)
+    u = u.at[0, 1:-1].set(bc["top"])
+    u = u.at[-1, 1:-1].set(bc["bottom"])
+    u = u.at[1:-1, 0].set(bc["left"])
+    u = u.at[1:-1, -1].set(bc["right"])
+    return u
+
+
+def check_divisible(hi: int, wi: int, px: int, py: int) -> None:
+    if hi % px or wi % py:
+        raise ValueError(
+            f"interior {hi}x{wi} not divisible by process grid {px}x{py}")

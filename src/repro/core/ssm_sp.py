@@ -1,0 +1,87 @@
+"""Sequence parallelism for SSM layers: the stencil discipline on time.
+
+For sequences too long for one device (the long-context regime mamba2 /
+zamba2 are assigned), the sequence axis is sharded and two pieces of
+boundary data move between neighbouring shards — exactly the halo pattern
+of the distributed Jacobi solver:
+
+  * the depthwise causal conv needs the previous shard's last (K-1)
+    tokens — a depth-(K-1) one-sided halo (``ppermute``, one hop);
+  * the SSD recurrence needs the state at the shard boundary — shard i's
+    final state feeds shard i+1. States compose associatively
+    (h' = decay * h + inc with per-shard (decay, inc) summaries), so the
+    boundary states come from an **associative scan over shards** — a
+    log-depth collective, not a serial chain.
+
+Implementation detail: each shard runs the local chunked SSD twice —
+pass 1 with zero inbound state yields (local outputs given zero state,
+final local increment); the inbound state's contribution is added in
+closed form (state-to-output decay), avoiding a second full scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.ssm import ssd_scan
+
+
+def _shard_decay(dt, a):
+    """Total decay of a shard: exp(sum_l dt*A). dt (b,l,g,m) -> (b,g,m)."""
+    return jnp.exp(jnp.sum(dt * a[None, None], axis=1))
+
+
+def ssd_sequence_parallel(x, dt, a, bmat, cmat, chunk: int, axis: str,
+                          n_shards: int, dtype=jnp.float32):
+    """Sequence-sharded SSD (call inside shard_map; seq dim pre-sharded).
+
+    x (b, l_loc, g, m, p); dt (b, l_loc, g, m) [post-softplus]; a (g, m);
+    b/c (b, l_loc, g, n). Returns y (b, l_loc, g, m, p).
+    """
+    b, l, g, m, p = x.shape
+    # pass 1: local scan from zero state -> outputs + local increment
+    y_local, inc = ssd_scan(x, dt, a, bmat, cmat, chunk, dtype)
+
+    if n_shards == 1:
+        return y_local
+
+    decay_b = _shard_decay(dt.astype(jnp.float32), a)        # (b, g, m)
+
+    # inbound state for each shard: associative scan over shards of
+    # (decay, inc) pairs, exclusive (shard 0 gets zero state).
+    def combine(lo, hi):
+        d1, s1 = lo
+        d2, s2 = hi
+        return d1 * d2, s2 + s1 * d2[..., None, None]
+
+    d_all = jax.lax.all_gather(decay_b, axis)                # (S, b, g, m)
+    s_all = jax.lax.all_gather(inc, axis)                    # (S, b, g, m, p, n)
+    d_cum, s_cum = jax.lax.associative_scan(combine, (d_all, s_all), axis=0)
+    idx = jax.lax.axis_index(axis)
+    zero = jnp.zeros_like(inc)
+    s_in = jnp.where(idx == 0, zero, s_cum[jnp.maximum(idx - 1, 0)])
+
+    # add the inbound state's contribution: y_t += C_t . (state decayed to t)
+    da = dt.astype(jnp.float32) * a[None, None]              # (b, l, g, m)
+    da_cs = jnp.cumsum(da, axis=1)                           # decay 0 -> t
+    contrib = jnp.einsum("blgn,bgmpn->blgmp", cmat.astype(dtype),
+                         s_in.astype(dtype),
+                         preferred_element_type=jnp.float32)
+    contrib = contrib * jnp.exp(da_cs)[..., None]
+    return (y_local.astype(jnp.float32) + contrib).astype(y_local.dtype)
+
+
+def conv_halo_exchange(xbc: jax.Array, k: int, axis: str, n_shards: int):
+    """Prepend the previous shard's last (k-1) tokens (zero for shard 0).
+
+    xbc (b, l_loc, c) -> (b, l_loc + k - 1, c); the caller's causal conv
+    then produces exactly the local l_loc outputs.
+    """
+    if n_shards == 1 or k == 1:
+        return jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    tail = xbc[:, -(k - 1):, :]
+    perm = [(i, i + 1) for i in range(n_shards - 1)]
+    halo = jax.lax.ppermute(tail, axis, perm)
+    idx = jax.lax.axis_index(axis)
+    halo = jnp.where(idx == 0, jnp.zeros_like(halo), halo)
+    return jnp.concatenate([halo, xbc], axis=1)

@@ -1,0 +1,144 @@
+"""Stencil specification and pure-JAX reference application.
+
+This is the mathematical heart of the paper: a weighted-neighbour update over
+a regular grid with fixed (Dirichlet) boundary cells. ``StencilSpec`` carries
+the relative offsets and weights; ``apply_stencil`` is the pure-jnp oracle the
+Pallas kernels are validated against.
+
+Grids are stored *including* their boundary ring: a domain of ``ny x nx``
+interior points is an array of shape ``(ny + 2r, nx + 2r)`` where ``r`` is the
+stencil radius. The boundary ring holds Dirichlet values and is never written.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A linear stencil: ``out[p] = sum_k w[k] * u[p + off[k]]``.
+
+    offsets: relative grid offsets, one per tap, each of length ndim.
+    weights: one weight per tap.
+    """
+
+    offsets: tuple[tuple[int, ...], ...]
+    weights: tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.offsets) != len(self.weights):
+            raise ValueError("offsets and weights must have equal length")
+        nd = {len(o) for o in self.offsets}
+        if len(nd) != 1:
+            raise ValueError("all offsets must have the same dimensionality")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.offsets[0])
+
+    @property
+    def radius(self) -> int:
+        """Maximum |offset| over all taps and dims (halo depth)."""
+        return max(abs(c) for off in self.offsets for c in off)
+
+    @property
+    def taps(self) -> int:
+        return len(self.offsets)
+
+
+def jacobi_2d_5pt() -> StencilSpec:
+    """The paper's stencil: average of the four face neighbours (Laplace)."""
+    return StencilSpec(
+        offsets=((-1, 0), (1, 0), (0, -1), (0, 1)),
+        weights=(0.25, 0.25, 0.25, 0.25),
+    )
+
+
+def laplace_2d_9pt() -> StencilSpec:
+    """9-point compact Laplacian (used to show generality beyond the paper)."""
+    return StencilSpec(
+        offsets=(
+            (-1, -1), (-1, 0), (-1, 1),
+            (0, -1), (0, 1),
+            (1, -1), (1, 0), (1, 1),
+        ),
+        weights=(0.05, 0.2, 0.05, 0.2, 0.2, 0.05, 0.2, 0.05),
+    )
+
+
+def advection_1d_3pt(c: float = 0.2) -> StencilSpec:
+    """Upwind-ish 1-D advection stencil (paper's stated future work)."""
+    return StencilSpec(offsets=((-1,), (0,), (1,)),
+                       weights=(0.5 * c + 0.25, 0.5, 0.25 - 0.5 * c))
+
+
+def interior(u: jax.Array, r: int) -> jax.Array:
+    """View of the interior (non-boundary) region of a ringed grid."""
+    idx = tuple(slice(r, s - r) for s in u.shape)
+    return u[idx]
+
+
+def apply_stencil(u: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One stencil sweep. Returns a new grid; boundary ring copied through.
+
+    Pure-jnp oracle: implemented with shifted slices (no pallas, no roll
+    wraparound hazards). Works for any ndim matching the spec.
+    """
+    r = spec.radius
+    if any(s <= 2 * r for s in u.shape):
+        raise ValueError(f"grid {u.shape} too small for radius {r}")
+    acc = None
+    for off, w in zip(spec.offsets, spec.weights):
+        idx = tuple(
+            slice(r + o, s - r + o) for o, s in zip(off, u.shape)
+        )
+        term = u[idx].astype(jnp.float32) * jnp.float32(w)
+        acc = term if acc is None else acc + term
+    out_idx = tuple(slice(r, s - r) for s in u.shape)
+    return u.at[out_idx].set(acc.astype(u.dtype))
+
+
+def residual(u: jax.Array, spec: StencilSpec) -> jax.Array:
+    """Max-norm update delta ``|apply(u) - u|_inf`` over the interior."""
+    v = apply_stencil(u, spec)
+    r = spec.radius
+    idx = tuple(slice(r, s - r) for s in u.shape)
+    return jnp.max(jnp.abs(v[idx].astype(jnp.float32) - u[idx].astype(jnp.float32)))
+
+
+def make_laplace_problem(
+    ny: int,
+    nx: int,
+    dtype=jnp.float32,
+    left: float = 1.0,
+    right: float = 0.0,
+    top: float = 0.0,
+    bottom: float = 0.0,
+    init: float = 0.0,
+) -> jax.Array:
+    """Build the paper's test problem: Laplace diffusion with fixed sides.
+
+    Returns a ``(ny+2, nx+2)`` grid (radius-1 ring) with Dirichlet boundary
+    values on each side and ``init`` in the interior.
+    """
+    u = jnp.full((ny + 2, nx + 2), init, dtype=dtype)
+    u = u.at[:, 0].set(left)
+    u = u.at[:, -1].set(right)
+    u = u.at[0, :].set(top)
+    u = u.at[-1, :].set(bottom)
+    return u
+
+
+def direct_solution_1d_profile(nx: int, left: float, right: float) -> jnp.ndarray:
+    """Analytic steady state for a laterally-uniform Laplace problem.
+
+    With top/bottom boundaries matching the linear profile (or a domain that
+    is tall enough that the mid-row converges to the 1-D solution), the
+    converged solution varies linearly from ``left`` to ``right``.
+    """
+    xs = jnp.arange(1, nx + 1, dtype=jnp.float32) / jnp.float32(nx + 1)
+    return left + (right - left) * xs

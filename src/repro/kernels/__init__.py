@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spots; every kernel has
+a pure-jnp oracle in ref.py and jit'd public wrappers in ops.py."""

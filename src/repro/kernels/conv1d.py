@@ -1,0 +1,75 @@
+"""Depthwise causal 1-D convolution as a Pallas stencil kernel.
+
+This is the Mamba2 conv frontend (width-4 depthwise causal conv along time)
+— a one-sided depth-(K-1) stencil over the sequence axis. It reuses the
+paper's optimized data-movement discipline from kernels/jacobi.py v1:
+
+  * the sequence is processed in contiguous row chunks (rows = time steps,
+    lanes = channels, which are contiguous in memory),
+  * each chunk is DMA'd once into VMEM including its (K-1)-deep left halo,
+  * the K taps are served by in-VMEM shifted views of the single resident
+    window (CB read-pointer aliasing, TPU-style) — no replicated HBM reads.
+
+Layout: x is (B, L, D) with D the fastest-moving axis; weights are (K, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_DEF_BL = 512
+
+
+def _pick_bl(length: int, bl: int) -> int:
+    bl = min(bl, length)
+    while length % bl:
+        bl -= 1
+    return bl
+
+
+def _kernel(x_hbm, w_ref, b_ref, o_ref, scratch, sem, *, k: int, bl: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    # One contiguous DMA: chunk + (k-1) halo steps. The host pre-pads the
+    # sequence with k-1 leading zeros so every window is in-bounds.
+    cp = pltpu.make_async_copy(
+        x_hbm.at[b, pl.ds(i * bl, bl + k - 1), :], scratch, sem)
+    cp.start()
+    cp.wait()
+    c = scratch[...].astype(jnp.float32)
+    acc = jnp.zeros((bl, c.shape[1]), jnp.float32)
+    for tap in range(k):
+        acc = acc + c[tap:tap + bl, :] * w_ref[tap, :].astype(jnp.float32)
+    acc = acc + b_ref[0, :].astype(jnp.float32)
+    o_ref[0, :, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "interpret"))
+def conv1d_depthwise_causal(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                            *, bl: int = _DEF_BL, interpret: bool = False) -> jax.Array:
+    """Depthwise causal conv: x (B, L, D), w (K, D), b (D,) -> (B, L, D)."""
+    bsz, length, d = x.shape
+    k = w.shape[0]
+    bl = _pick_bl(length, bl)
+    if b is None:
+        b = jnp.zeros((d,), x.dtype)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, bl=bl),
+        grid=(bsz, length // bl),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((k, d), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, d), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bl, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, length, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bl + k - 1, d), x.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(xp, w, b.reshape(1, d))
+    return out

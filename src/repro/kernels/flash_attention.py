@@ -1,0 +1,121 @@
+"""Fused flash-attention forward (Pallas TPU) — the paper's lesson at
+attention scale.
+
+The jnp online-softmax path (layers/attention.py) still materializes each
+(B, H, Sq, chunk) score block in HBM; at 32k prefill those round-trips
+dominate the roofline memory term (EXPERIMENTS.md §Roofline). This kernel
+keeps the whole score block in VMEM — one HBM read of Q/K/V, one write of
+the output — exactly the v1-jacobi discipline ("compute from resident
+data; never round-trip intermediates").
+
+Forward-only (serving prefill needs no gradient). GQA-aware: grid is
+(batch, kv_head, q_block); the q-group dim rides inside the block. Causal
+masking by absolute position; KV blocks strictly after the q block are
+skipped via ``pl.when`` (halves the work at long sequence).
+
+Integration: ``ops.flash_attention`` (below) wraps the kernel in
+``shard_map`` (batch -> data, kv_heads -> model) so it composes with the
+pjit-ed serving graph; on non-TPU backends it runs in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, sk: int, causal: bool, scale: float):
+    # q_ref: (1, 1, bq, g, hd) block; k_ref/v_ref: (1, 1, sk, hd) rows for
+    # this (batch, kv_head); o_ref: (1, 1, bq, g, hd).
+    qi = pl.program_id(2)
+    g, hd = q_ref.shape[3], q_ref.shape[4]
+
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, g), 0)
+
+    nk = sk // bk
+
+    def body(j, _):
+        @pl.when(jnp.logical_not(causal) | (j * bk <= qi * bq + bq - 1))
+        def _():
+            kb = k_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+            vb = v_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q.reshape(bq * g, hd), kb,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32).reshape(bq, g, bk)
+            if causal:
+                k_pos = j * bk + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, g, bk), 2)
+                mask = k_pos <= q_pos[:, :, None]
+                s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[:, :, None])
+            l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+            upd = jax.lax.dot_general(
+                p.reshape(bq * g, bk), vb,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).reshape(bq, g, hd)
+            acc_scr[...] = acc_scr[...] * alpha[:, :, None] + upd
+            m_scr[...] = m_new
+        return 0
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    l = jnp.maximum(l_scr[...], 1e-30)
+    o_ref[0, 0] = (acc_scr[...] / l[:, :, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                              "interpret"))
+def flash_attention_local(q, k, v, *, causal: bool = True, bq: int = 512,
+                          bk: int = 512, interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd); H = K*g. Returns (B,Sq,H,hd).
+
+    Single-device kernel (use ops.flash_attention for the sharded wrapper).
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = hd ** -0.5
+
+    # layout: (B, K, Sq, g, hd) blocks for q; (B, K, Sk, hd) rows for k/v
+    qr = q.reshape(b, sq, kh, g, hd).transpose(0, 2, 1, 3, 4)
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, sk=sk, causal=causal,
+                          scale=scale),
+        grid=(b, kh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, g, hd),
+                         lambda bi, ki, qi: (bi, ki, qi, 0, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, ki, qi: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, ki, qi: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, g, hd),
+                               lambda bi, ki, qi: (bi, ki, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, sq, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, sq, h, hd)

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``jacobi_step(u, version=...)`` is the single entry point the solver drivers
+and benchmarks use; ``version`` selects the kernel generation (or the pure
+reference). On CPU (this container) the Pallas kernels run in interpret mode
+automatically; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels import jacobi as _jacobi
+from repro.kernels import conv1d as _conv1d
+
+VERSIONS = ("ref", "v0", "v1", "v1db", "v2")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def jacobi_step(u: jax.Array, *, version: str = "v1", bm: int = 256,
+                t: int = 8, interpret: bool | None = None) -> jax.Array:
+    """One (or, for v2, ``t``) Jacobi sweep(s) with the selected kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if version == "ref":
+        return _ref.jacobi_step(u)
+    if version == "v0":
+        return _jacobi.jacobi_v0_shifted(u, bm=bm, interpret=interpret)
+    if version == "v1":
+        return _jacobi.jacobi_v1_rowchunk(u, bm=bm, interpret=interpret)
+    if version == "v1db":
+        return _jacobi.jacobi_v1_dbuf(u, bm=bm, interpret=interpret)
+    if version == "v2":
+        return _jacobi.jacobi_v2_temporal(u, t=t, bm=bm, interpret=interpret)
+    raise ValueError(f"unknown jacobi kernel version {version!r}; one of {VERSIONS}")
+
+
+def make_step_fn(version: str = "v1", **kw):
+    """Partially-applied step function for the solver drivers."""
+    return functools.partial(jacobi_step, version=version, **kw)
+
+
+def conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+           bl: int = 512, use_kernel: bool = True,
+           interpret: bool | None = None) -> jax.Array:
+    """Depthwise causal conv1d; Pallas kernel or jnp fallback."""
+    if not use_kernel:
+        return _ref.conv1d_depthwise_causal(x, w, b)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _conv1d.conv1d_depthwise_causal(x, w, b, bl=bl, interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused attention forward, sharded: batch -> data(/pod), kv_heads ->
+    model via shard_map when a mesh context is active; plain kernel
+    otherwise. q (B,Sq,H,hd), k/v (B,Sk,K,hd) -> (B,Sq,H,hd)."""
+    from repro.kernels.flash_attention import flash_attention_local
+    from repro.dist.sharding import _context_mesh, pspec_for, ACT_RULES
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    fn = lambda a, b_, c: flash_attention_local(  # noqa: E731
+        a, b_, c, causal=causal, bq=bq, bk=bk, interpret=interpret)
+
+    mesh = _context_mesh()
+    if mesh is None:
+        return fn(q, k, v)
+    kvspec = pspec_for(("batch", None, "kv_heads", None), k.shape, mesh,
+                       ACT_RULES)
+    # q's head sharding must mirror the achieved KV-head sharding — a q
+    # shard must own whole GQA groups, which only holds when K itself
+    # divides the axis (H = K*g then divides too).
+    qspec = P(kvspec[0], None, kvspec[2], None)
+    return shard_map(fn, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                     out_specs=qspec, check_vma=False)(q, k, v)

@@ -1,0 +1,114 @@
+"""Streaming / data-access-strategy kernels (the paper's §V study, on TPU).
+
+The paper probes the Grayskull memory subsystem with a benchmark that moves
+data DRAM -> core -> DRAM while sweeping (a) access batch size, (b)
+contiguity, (c) per-access synchronization, (d) read replication, and (e)
+DRAM-bank interleaving. The TPU analogues implemented here:
+
+  * ``stream_copy``       — HBM->VMEM->HBM copy with a configurable block
+      shape (bm, bn). Wide blocks (bn = full row) are the contiguous case;
+      narrow bn emulates small/strided accesses (sub-512B HBM transactions).
+  * ``stream_copy_rowdma`` — same traffic but issued as one DMA per row with
+      either per-row waits ("sync") or a single bulk wait ("no sync"),
+      reproducing Tables III/IV's sync column.
+  * ``stream_replicated`` — every block is read ``factor`` times
+      (accumulated), reproducing Table V's replicated-read overhead.
+
+Interleaving (Table VI) has no directly programmable analogue on TPU (HBM is
+hardware-interleaved); its spiritual analogue — layout/tiling choice — is
+covered by the block-shape sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def stream_copy(x: jax.Array, *, bm: int, bn: int, interpret: bool = False) -> jax.Array:
+    """Blocked identity copy; block shape controls HBM transaction width."""
+    h, w = x.shape
+    assert h % bm == 0 and w % bn == 0, (x.shape, bm, bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(h // bm, w // bn),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _rowdma_kernel(x_hbm, o_ref, scratch, sems, *, bm: int, sync: bool):
+    i = pl.program_id(0)
+    # One DMA per row: the paper's "many small accesses" regime.
+    for r in range(bm):
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm + r, 1), :], scratch.at[pl.ds(r, 1), :],
+            sems.at[r])
+        cp.start()
+        if sync:
+            cp.wait()  # per-access synchronization (Tables III/IV "sync")
+    if not sync:
+        for r in range(bm):
+            pltpu.make_async_copy(
+                x_hbm.at[pl.ds(i * bm + r, 1), :], scratch.at[pl.ds(r, 1), :],
+                sems.at[r]).wait()
+    o_ref[...] = scratch[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "sync", "interpret"))
+def stream_copy_rowdma(x: jax.Array, *, bm: int, sync: bool,
+                       interpret: bool = False) -> jax.Array:
+    """Copy issued one row-DMA at a time, with or without per-access waits."""
+    h, w = x.shape
+    assert h % bm == 0
+    return pl.pallas_call(
+        functools.partial(_rowdma_kernel, bm=bm, sync=sync),
+        grid=(h // bm,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, w), x.dtype),
+                        pltpu.SemaphoreType.DMA((bm,))],
+        interpret=interpret,
+    )(x)
+
+
+def _replicated_kernel(x_hbm, o_ref, scratch, sem, *, bm: int, factor: int):
+    i = pl.program_id(0)
+    acc = jnp.zeros(scratch.shape, jnp.float32)
+    for _ in range(factor):
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), :], scratch, sem)
+        cp.start()
+        cp.wait()
+        acc = acc + scratch[...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "factor", "interpret"))
+def stream_replicated(x: jax.Array, *, bm: int, factor: int,
+                      interpret: bool = False) -> jax.Array:
+    """Each block is fetched ``factor`` times from HBM (Table V analogue)."""
+    h, w = x.shape
+    assert h % bm == 0
+    return pl.pallas_call(
+        functools.partial(_replicated_kernel, bm=bm, factor=factor),
+        grid=(h // bm,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, w), x.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each supported cell this AOT-compiles the real jitted program —
+train_step (optimizer included) for training shapes, serve_step for
+decode shapes, prefill for prefill shapes — against the production mesh,
+prints memory_analysis / cost_analysis, and records the roofline terms to
+``experiments/dryrun/<mesh>/<arch>.<shape>.json`` (resumable; the roofline
+tables in EXPERIMENTS.md are generated from these files).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh pod --shape train_4k
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro import roofline  # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import tuning  # noqa: E402
+from repro.models.registry import build_model, count_active_params  # noqa: E402
+from repro.train.optimizer import adamw, warmup_cosine  # noqa: E402
+from repro.train.trainstep import make_train_step, TrainState  # noqa: E402
+
+
+def abstract_state(model, opt, cfg):
+    """(TrainState ShapeDtypeStructs, logical specs) without allocation."""
+    captured = {}
+
+    def init(key):
+        params, specs = model.init(key)
+        captured["specs"] = specs
+        return TrainState(params, opt.init(params))
+
+    sds = jax.eval_shape(init, jax.random.PRNGKey(0))
+    return sds, captured["specs"]
+
+
+def lower_cell(arch: str, shape: str, mesh, multi_pod: bool):
+    cfg0 = configs.get_config(arch)
+    cfg, knobs = tuning.tuned(cfg0, shape, mesh)
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+    batch_sds = input_specs(cfg, shape)
+    batch_sh = shd.batch_shardings(batch_sds, mesh)
+
+    if cell.kind == "train":
+        opt = adamw(warmup_cosine(3e-4, 2000, 100_000),
+                    moments_dtype=jnp.dtype(knobs.moments_dtype))
+        step = make_train_step(model, opt, knobs.accum_steps,
+                               accum_dtype=jnp.dtype(knobs.accum_dtype))
+        state_sds, specs = abstract_state(model, opt, cfg)
+        state_sh = shd.state_shardings(state_sds, specs, mesh)
+        metrics_sds = jax.eval_shape(step, state_sds, batch_sds)[1]
+        metrics_sh = jax.tree.map(lambda _: shd.replicated(mesh), metrics_sds)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,) if knobs.donate_state else ())
+        lowered = fn.lower(state_sds, batch_sds)
+        tokens = cell.global_batch * cell.seq_len
+        mf = roofline.model_flops_train(count_active_params(cfg0), tokens)
+        return lowered, mf, knobs
+
+    # inference cells: abstract params only
+    captured = {}
+
+    def init_params(key):
+        params, specs = model.init(key)
+        captured["specs"] = specs
+        return params
+
+    params_sds = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    params_sh = shd.tree_shardings(params_sds, captured["specs"], mesh)
+
+    if cell.kind == "prefill":
+        def prefill(params, batch):
+            logits, _, _ = model.forward(params, batch, last_only=True)
+            return logits
+
+        fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        lowered = fn.lower(params_sds, batch_sds)
+        tokens = cell.global_batch * cell.seq_len
+        mf = roofline.model_flops_infer(count_active_params(cfg0), tokens)
+        return lowered, mf, knobs
+
+    # decode: one token against a seq_len cache
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len))
+    cache_sh = shd.tree_shardings(cache_sds, model.cache_axes(), mesh)
+
+    def serve_step(params, cache, batch):
+        logits, new_cache, _ = model.forward(params, batch, cache)
+        return logits, new_cache
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(params_sh, cache_sh, batch_sh),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(1,))
+    lowered = fn.lower(params_sds, cache_sds, batch_sds)
+    mf = roofline.model_flops_infer(count_active_params(cfg0),
+                                    cell.global_batch)
+    return lowered, mf, knobs
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, outdir: str) -> dict:
+    multi_pod = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    pod_size = 256 if multi_pod else None
+    cfg = configs.get_config(arch)
+    ok, why = cell_supported(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "n_devices": n_dev}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    with mesh:
+        lowered, model_flops, knobs = lower_cell(arch, shape, mesh, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rl = roofline.analyze(compiled, n_dev, model_flops,
+                              pod_size=pod_size)
+        mem = roofline.memory_per_device(compiled)
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               accum_steps=knobs.accum_steps,
+               memory=mem, roofline=rl.as_dict())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(configs.ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+
+    failures = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                d = os.path.join(args.outdir, mesh_name)
+                os.makedirs(d, exist_ok=True)
+                path = os.path.join(d, f"{arch}.{shape}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached ] {mesh_name:8s} {arch:22s} {shape}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh_name, args.outdir)
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    mb = rec["memory"].get("total_nonalias", 0) / 2**30
+                    extra = (f"dom={r['dominant']:10s} "
+                             f"bound={r['bound_s']*1e3:8.2f}ms "
+                             f"mem={mb:6.2f}GiB "
+                             f"lower={rec['lower_s']}s "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status:7s}] {mesh_name:8s} {arch:22s} "
+                      f"{shape:12s} {extra}", flush=True)
+    print(f"\ndone; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

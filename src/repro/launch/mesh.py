@@ -1,0 +1,28 @@
+"""Production meshes. Functions only — importing this never touches jax
+device state; ``jax.make_mesh`` runs when the launcher calls it."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods over DCI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (dryrun.py does this)")
+    dev = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh over the first prod(shape) devices (tests/examples)."""
+    ndev = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

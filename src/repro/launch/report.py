@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+recorded dry-run JSON. Usage:
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*", "*.json"))):
+        recs.append(json.load(open(f)))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], order.get(r["shape"], 9)))
+    return recs
+
+
+def roofline_table(recs, mesh: str) -> str:
+    rows = ["| arch | shape | fits? | compute | memory | collective | "
+            "bound | dominant | MODEL/HLO | mem GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                        f"| *skip: {r['reason'][:48]}…* | — | — |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"].get("total_nonalias", 0) / 2**30
+        fits = "✓" if mem <= 16.0 else f"✗"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fits} "
+            f"| {rl['compute_s']*1e3:,.0f} ms | {rl['memory_s']*1e3:,.0f} ms "
+            f"| {rl['collective_s']*1e3:,.0f} ms | {rl['bound_s']*1e3:,.0f} ms "
+            f"| {rl['dominant']} | {rl['useful_ratio']:.2f} | {mem:.1f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| mesh | arch | shape | status | lower | compile | accum | "
+            "HLO flops (global) | collective B/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                        f"skipped | — | — | — | — | — |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | ok "
+            f"| {r['lower_s']}s | {r['compile_s']}s | {r.get('accum_steps','—')} "
+            f"| {rl['flops']:.2e} | {rl['coll_bytes']:.2e} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--which", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.which == "roofline":
+        print(roofline_table(recs, args.mesh))
+    else:
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

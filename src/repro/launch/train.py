@@ -1,0 +1,91 @@
+"""Training driver: any --arch on this host's devices, fault-tolerant.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume auto
+
+Production meshes are exercised via dryrun.py (this container has one real
+device); this driver runs real optimization end-to-end — synthetic-corpus
+loss goes down, checkpoints rotate, restarts resume exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "lion", "sgd"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.models.registry import build_model
+    from repro.train import optimizer as O
+    from repro.train.trainstep import make_train_step, TrainState
+    from repro.train.data import DataConfig, make_pipeline
+    from repro.train.fault import FaultConfig, FaultTolerantRunner
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    model = build_model(cfg)
+    sched = O.warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
+    opt = {"adamw": O.adamw, "lion": O.lion, "sgd": O.sgd}[args.optimizer](sched)
+
+    params, _ = model.init(jax.random.PRNGKey(args.seed))
+    state = TrainState(params, opt.init(params))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M")
+
+    step_fn = jax.jit(make_train_step(model, opt, args.accum),
+                      donate_argnums=(0,))
+
+    data = make_pipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed))
+
+    fault = FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    runner = FaultTolerantRunner(step_fn, state, fault)
+    start = runner.resume_or_init() if args.resume == "auto" else 0
+    if start:
+        print(f"resumed from step {start - 1}")
+
+    losses = []
+
+    def on_metrics(step, metrics, dt):
+        ce = float(metrics["ce"])
+        losses.append(ce)
+        if step % 10 == 0 or step == start:
+            print(f"step {step:5d}  ce={ce:.4f}  {dt*1e3:7.1f} ms/step",
+                  flush=True)
+
+    def batches():
+        for b in data.batches(start_step=start):
+            yield {"tokens": jnp.asarray(b["tokens"]),
+                   "labels": jnp.asarray(b["labels"])}
+
+    t0 = time.time()
+    runner.run(batches(), args.steps, start_step=start,
+               metrics_cb=on_metrics)
+    print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s; "
+          f"first ce={losses[0]:.4f} last ce={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

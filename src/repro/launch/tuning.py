@@ -1,0 +1,72 @@
+"""Per-(arch x shape) execution knobs for the production meshes.
+
+Baseline policy (applies everywhere), then per-cell overrides accumulated
+during the §Perf hillclimb — every entry cites its EXPERIMENTS.md iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import SHAPES
+from repro.models.base import ModelConfig
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+# (arch, shape) -> knob overrides. Filled by the §Perf iterations.
+OVERRIDES: dict[tuple[str, str], dict] = {
+    # §Perf P5/P6 (EXPERIMENTS.md): the 235B MoE cell is memory- and
+    # FSDP-regather-bound; bf16 accumulation halves the grad buffer and
+    # accum=8 halves the per-step weight regathers (activation memory
+    # doubles but stays within budget).
+    ("qwen3-moe-235b-a22b", "train_4k"): {
+        "accum_dtype": "bfloat16", "moments_dtype": "bfloat16"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellKnobs:
+    accum_steps: int = 1
+    donate_state: bool = True
+    accum_dtype: str = "float32"
+    moments_dtype: str = "float32"
+
+
+def tuned(cfg: ModelConfig, shape: str, mesh) -> tuple[ModelConfig, CellKnobs]:
+    """Apply the execution policy for this cell to the model config."""
+    cell = SHAPES[shape]
+    upd: dict = {}
+    knobs = CellKnobs()
+
+    if cell.kind == "train":
+        upd["remat"] = "full"
+        upd["attn_chunk"] = 1024
+        # accumulate until the per-device microbatch is 1 (fits every arch;
+        # §Perf iterates this down where memory allows)
+        dp = dp_size(mesh)
+        accum = max(1, cell.global_batch // dp)
+        knobs = CellKnobs(accum_steps=accum)
+    else:
+        # inference: bf16 weights, no remat
+        upd["remat"] = "none"
+        upd["param_dtype"] = jnp.bfloat16
+        upd["attn_chunk"] = 1024
+
+    over = OVERRIDES.get((cfg.name, shape), {})
+    knob_over = {k: v for k, v in over.items()
+                 if k in ("accum_steps", "donate_state", "accum_dtype",
+                          "moments_dtype")}
+    cfg_over = {k: v for k, v in over.items()
+                if k not in ("accum_steps", "donate_state", "accum_dtype",
+                             "moments_dtype")}
+    upd.update(cfg_over)
+    if knob_over:
+        knobs = dataclasses.replace(knobs, **knob_over)
+    return dataclasses.replace(cfg, **upd), knobs

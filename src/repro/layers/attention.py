@@ -1,0 +1,201 @@
+"""GQA attention with RoPE, KV cache, and KV-chunked (online-softmax) path.
+
+The chunked path scans over KV blocks with a running (max, sum, acc) carry —
+flash-attention's math in pure JAX — so 32k-token prefill never materializes
+a full (S, S) score matrix. Decode (q_len == 1) attends over the cache
+directly. GQA keeps K/V heads grouped; the query-head group dim is explicit
+in the einsums so no broadcast materialization happens.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder
+from repro.layers.rope import apply_rope
+from repro.dist.sharding import constrain
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, K, hd)
+    v: jax.Array      # (B, S_max, K, hd)
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def gqa_init(b: ParamBuilder, name: str, cfg: ModelConfig,
+             in_dim: int | None = None):
+    d = in_dim or cfg.d_model
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def mk(c):
+        c.normal("wq", (d, h * hd), ("embed", "heads"))
+        c.normal("wk", (d, k * hd), ("embed", "kv_heads"))
+        c.normal("wv", (d, k * hd), ("embed", "kv_heads"))
+        c.normal("wo", (h * hd, cfg.d_model), ("heads", "embed"))
+        if cfg.qkv_bias:
+            c.zeros("bq", (h * hd,), ("heads",))
+            c.zeros("bk", (k * hd,), ("kv_heads",))
+            c.zeros("bv", (k * hd,), ("kv_heads",))
+    b.sub(name, mk)
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    dt = cfg.dtype
+    bsz, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(dt))
+    kk = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        kk = kk + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = constrain(q.reshape(bsz, s, h, hd), ("batch", "qseq", "heads", None))
+    kk = constrain(kk.reshape(bsz, s, k, hd),
+                   ("batch", None, "kv_heads", None))
+    v = constrain(v.reshape(bsz, s, k, hd), ("batch", None, "kv_heads", None))
+    return q, kk, v
+
+
+def _full_attention(q, k, v, q_pos, k_pos, causal, cfg: ModelConfig):
+    """Unchunked attention (small-seq / decode). GQA group dim explicit."""
+    bsz, sq, h, hd = q.shape
+    kh = k.shape[2]
+    hdv = v.shape[-1]
+    g = h // kh
+    qg = q.reshape(bsz, sq, kh, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = k_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return ctx.reshape(bsz, sq, h, hdv)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, cfg: ModelConfig):
+    """Online-softmax scan over KV chunks (memory O(S·chunk))."""
+    bsz, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kh = k.shape[2]
+    hdv = v.shape[-1]
+    g = h // kh
+    chunk = min(cfg.attn_chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    nc = sk // chunk
+    # kv_heads takes the model axis when it divides; otherwise the GQA
+    # group dim, otherwise the query-sequence dim (context parallelism).
+    qg = constrain(q.reshape(bsz, sq, kh, g, hd),
+                   ("batch", "qseq", "kv_heads", "heads", None))
+    scale = hd ** -0.5
+
+    kc = constrain(k.reshape(bsz, nc, chunk, kh, hd).transpose(1, 0, 2, 3, 4),
+                   (None, "batch", None, "kv_heads", None))
+    vc = constrain(v.reshape(bsz, nc, chunk, kh, hdv).transpose(1, 0, 2, 3, 4),
+                   (None, "batch", None, "kv_heads", None))
+    pc = k_pos.reshape(bsz, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, kp = inp
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, ("batch", "kv_heads", "heads", "qseq", None))
+        if causal:
+            mask = kp[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pmat = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pmat.sum(axis=-1)
+        upd = jnp.einsum("bkgqs,bskh->bkgqh", pmat.astype(cfg.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    # Remat the chunk step: backward recomputes per-chunk scores instead of
+    # stacking (nc, B, kh, g, Sq, chunk) score residuals — this is what
+    # makes the online-softmax path flash-attention-shaped in memory
+    # (§Perf iteration P2).
+    body = jax.checkpoint(body)
+    carry_axes = ("batch", "kv_heads", "heads", "qseq")
+    m0 = constrain(jnp.full((bsz, kh, g, sq), NEG_INF, jnp.float32),
+                   carry_axes)
+    l0 = constrain(jnp.zeros((bsz, kh, g, sq), jnp.float32), carry_axes)
+    a0 = constrain(jnp.zeros((bsz, kh, g, sq, hdv), jnp.float32),
+                   carry_axes + (None,))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    ctx = acc / jnp.maximum(l[..., None], 1e-30)
+    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, h, hdv)
+    return constrain(ctx, ("batch", "qseq", "heads", None)).astype(cfg.dtype)
+
+
+def attention(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+              cache: Optional[KVCache] = None,
+              rope: bool = True) -> tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention. With a cache, writes new KV at ``cache.length``.
+
+    x: (B, S, d_in); positions: (B, S). Returns (out (B, S, d_model), cache').
+    """
+    dt = cfg.dtype
+    q, k, v = _project_qkv(p, x, cfg)
+    if rope:
+        q = apply_rope(q, positions, frac=cfg.rope_frac, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, frac=cfg.rope_frac, theta=cfg.rope_theta)
+
+    if cache is not None:
+        sq = x.shape[1]
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+        new_cache = KVCache(k_all, v_all, cache.length + sq)
+        if sq > cfg.attn_chunk:
+            # Long prefill into an empty cache: attend over the freshly
+            # computed K/V with the online-softmax chunked path instead of
+            # the cache buffer (exact when cache.length == 0, which is the
+            # serving engine's prefill contract).
+            if cfg.attn_impl == "flash":
+                from repro.kernels.ops import flash_attention
+                ctx = flash_attention(q, k, v, causal=True)
+            else:
+                ctx = _chunked_attention(q, k, v, positions, positions,
+                                         True, cfg)
+        else:
+            k_pos = jnp.broadcast_to(jnp.arange(cache.k.shape[1])[None, :],
+                                     (x.shape[0], cache.k.shape[1]))
+            # Mask out unwritten tail: beyond length is treated as future.
+            valid = k_pos < (cache.length + sq)
+            k_pos = jnp.where(valid, k_pos, jnp.iinfo(jnp.int32).max)
+            ctx = _full_attention(q, k_all.astype(dt), v_all.astype(dt),
+                                  positions, k_pos, True, cfg)
+        out = jnp.einsum("bsq,qd->bsd", ctx.reshape(x.shape[0], sq, -1),
+                         p["wo"].astype(dt))
+        return out, new_cache
+
+    k_pos = positions
+    if x.shape[1] > cfg.attn_chunk:
+        if cfg.attn_impl == "flash":
+            from repro.kernels.ops import flash_attention
+            ctx = flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            ctx = _chunked_attention(q, k, v, positions, k_pos, cfg.causal,
+                                     cfg)
+    else:
+        ctx = _full_attention(q, k, v, positions, k_pos, cfg.causal, cfg)
+    bsz, s, _, _ = q.shape
+    out = jnp.einsum("bsq,qd->bsd", ctx.reshape(bsz, s, -1), p["wo"].astype(dt))
+    return out, None
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=None) -> KVCache:
+    dtype = dtype or cfg.dtype
+    k = jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+    return KVCache(k=k, v=k, length=jnp.int32(0))

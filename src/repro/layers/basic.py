@@ -1,0 +1,108 @@
+"""Norms, MLPs, embeddings — shared building blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rms_norm_init(b: ParamBuilder, name: str, dim: int):
+    b.sub(name, lambda c: c.ones("scale", (dim,), (None,)))
+
+
+def rms_norm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm_init(b: ParamBuilder, name: str, dim: int):
+    def mk(c):
+        c.ones("scale", (dim,), (None,))
+        c.zeros("bias", (dim,), (None,))
+    b.sub(name, mk)
+
+
+def layer_norm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+def swiglu_init(b: ParamBuilder, name: str, d: int, f: int,
+                d_out: int | None = None):
+    d_out = d_out or d
+
+    def mk(c):
+        c.normal("gate", (d, f), ("embed", "mlp"))
+        c.normal("up", (d, f), ("embed", "mlp"))
+        c.normal("down", (f, d_out), ("mlp", "embed"))
+    b.sub(name, mk)
+
+
+def swiglu(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from repro.dist.sharding import constrain
+    dt = cfg.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    h = constrain(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(dt))
+
+
+def gelu_mlp_init(b: ParamBuilder, name: str, d: int, f: int):
+    def mk(c):
+        c.normal("up", (d, f), ("embed", "mlp"))
+        c.zeros("up_b", (f,), ("mlp",))
+        c.normal("down", (f, d), ("mlp", "embed"))
+        c.zeros("down_b", (d,), (None,))
+    b.sub(name, mk)
+
+
+def gelu_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["up"].astype(dt)) + p["up_b"].astype(dt)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(dt)) + p["down_b"].astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / LM head
+# ----------------------------------------------------------------------------
+
+def embedding_init(b: ParamBuilder, cfg: ModelConfig):
+    v, d = cfg.padded_vocab, cfg.d_model
+
+    def mk(c):
+        # GPT-style small embedding init: pre-norm blocks renormalize, and
+        # a tied head then starts with sane logit magnitudes.
+        c.normal("table", (v, d), ("vocab", "embed"), scale=0.02)
+        if not cfg.tie_embeddings:
+            c.normal("head", (d, v), ("embed", "vocab"))
+    b.sub("embedding", mk)
+
+
+def embed(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["embedding"]["table"].astype(cfg.dtype)[tokens]
+
+
+def unembed(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits in f32 (softmax stability)."""
+    if cfg.tie_embeddings:
+        w = p["embedding"]["table"].astype(cfg.dtype).T
+    else:
+        w = p["embedding"]["head"].astype(cfg.dtype)
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)

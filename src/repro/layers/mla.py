@@ -1,0 +1,158 @@
+"""Multi-head Latent Attention (MLA) — MiniCPM3 / DeepSeek-V2 style.
+
+Prefill computes full K/V from the latent; decode uses the *absorbed* form:
+the KV up-projections are folded into the query/output paths so attention
+runs directly against the (kv_lora_rank + rope_dim)-wide latent cache. The
+cache is therefore ~(2·K·hd)/(kv_lora+rope) times smaller than GQA's.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder
+from repro.layers.basic import rms_norm, rms_norm_init
+from repro.layers.rope import apply_rope
+from repro.dist.sharding import constrain
+
+NEG_INF = -1e30
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S_max, kv_lora)
+    k_rope: jax.Array  # (B, S_max, rope_dim)
+    length: jax.Array
+
+
+def mla_init(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vhd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    def mk(c):
+        if qr:
+            c.normal("q_down", (d, qr), ("embed", None))
+            rms_norm_init(c, "q_norm", qr)
+            c.normal("q_up", (qr, h * (nope + rope)), (None, "heads"))
+        else:
+            c.normal("q_proj", (d, h * (nope + rope)), ("embed", "heads"))
+        c.normal("kv_down", (d, kvr + rope), ("embed", None))
+        rms_norm_init(c, "kv_norm", kvr)
+        c.normal("k_up", (kvr, h * nope), (None, "heads"))
+        c.normal("v_up", (kvr, h * vhd), (None, "heads"))
+        c.normal("wo", (h * vhd, d), ("heads", "embed"))
+    b.sub(name, mk)
+
+
+def _queries(p, x, positions, cfg: ModelConfig):
+    dt = cfg.dtype
+    bsz, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["q_down"].astype(dt))
+        cq = rms_norm(p["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rq->bsq", cq, p["q_up"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["q_proj"].astype(dt))
+    q = constrain(q.reshape(bsz, s, h, nope + rope),
+                  ("batch", "qseq", "heads", None))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, frac=1.0, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, positions, cfg: ModelConfig):
+    dt = cfg.dtype
+    kvr, rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    down = jnp.einsum("bsd,dr->bsr", x, p["kv_down"].astype(dt))
+    down = constrain(down, ("batch", None, None))
+    c_kv, k_rope = down[..., :kvr], down[..., kvr:]
+    c_kv = rms_norm(p["kv_norm"], c_kv, cfg.norm_eps)
+    # Single shared rope "head" (broadcast over query heads).
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, frac=1.0,
+                        theta=cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+                  cache: Optional[MLACache] = None
+                  ) -> tuple[jax.Array, Optional[MLACache]]:
+    dt = cfg.dtype
+    bsz, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, vhd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    scale = (nope + rope) ** -0.5
+
+    q_nope, q_rope = _queries(p, x, positions, cfg)
+    c_kv, k_rope = _latents(p, x, positions, cfg)
+
+    w_ku = p["k_up"].astype(dt).reshape(kvr, h, nope)
+    w_vu = p["v_up"].astype(dt).reshape(kvr, h, vhd)
+
+    if cache is not None and s > cfg.attn_chunk:
+        # Long prefill into an empty cache: write latents, but compute the
+        # context via the chunked expanded path (exact for length == 0).
+        c_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0))
+        r_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache.length, 0))
+        new_cache = MLACache(c_all, r_all, cache.length + s)
+        out, _ = mla_attention(p, x, positions, cfg, None)
+        return out, new_cache
+
+    if cache is not None:
+        # -------- absorbed decode/serve path over the latent cache --------
+        c_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0))
+        r_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache.length, 0))
+        new_cache = MLACache(c_all, r_all, cache.length + s)
+        smax = c_all.shape[1]
+        k_pos = jnp.arange(smax)[None, :]
+        valid = k_pos < (cache.length + s)
+
+        # Absorb k_up into the query: q_abs (B,S,H,kvr)
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_ku)
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs, c_all.astype(dt),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, r_all.astype(dt),
+                               preferred_element_type=jnp.float32)) * scale
+        mask = (k_pos[:, None, None, :] <= positions[:, None, :, None]) & \
+            valid[:, None, None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+        pr = jax.nn.softmax(scores, axis=-1).astype(dt)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", pr, c_all.astype(dt))
+        ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_vu)
+        out = jnp.einsum("bsq,qd->bsd", ctx.reshape(bsz, s, h * vhd),
+                         p["wo"].astype(dt))
+        return out, new_cache
+
+    # -------- prefill/training path: expand latents to full K/V --------
+    from repro.layers.attention import _chunked_attention, _full_attention
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, w_ku)
+    v = jnp.einsum("btr,rhv->bthv", c_kv, w_vu)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (bsz, s, h, rope))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if s > cfg.attn_chunk:
+        ctx = _chunked_attention(q, k, v, positions, positions, cfg.causal, cfg)
+    else:
+        ctx = _full_attention(q, k, v, positions, positions, cfg.causal, cfg)
+    out = jnp.einsum("bsq,qd->bsd", ctx.reshape(bsz, s, h * vhd),
+                     p["wo"].astype(dt))
+    return out, None
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> MLACache:
+    dtype = dtype or cfg.dtype
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        length=jnp.int32(0),
+    )

@@ -1,0 +1,38 @@
+"""Rotary position embeddings (full and partial/2-d variants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``dim`` rotated dims. positions: (...,) int."""
+    assert dim % 2 == 0, dim
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, frac: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotate the first ``frac`` fraction of head dims.
+
+    x: (B, S, H, hd); positions: (B, S). ``frac=0.5`` reproduces ChatGLM's
+    2-d/partial rotary; ``frac=1.0`` is standard llama RoPE.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    cos, sin = rope_angles(positions, rot, theta)   # (B, S, rot/2)
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    # re-interleave
+    y = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([y.astype(x.dtype), x[..., rot:]], axis=-1)

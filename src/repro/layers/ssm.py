@@ -1,0 +1,240 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + decode step.
+
+Follows the SSD chunked algorithm (Dao & Gu 2024): within a chunk the
+recurrence is computed as a masked attention-like product (MXU-friendly);
+across chunks a short sequential scan carries the (H, P, N) state. The
+depthwise causal conv frontend is stencil-shaped — it can run through the
+paper-technique Pallas kernel (``ssm_conv_impl='pallas'``) or as shifted
+adds that XLA/GSPMD partitions transparently (``'jnp'``, default in the
+multi-pod configs).
+
+Shapes: x (B, L, D); heads H = d_inner / head_dim P; B/C share G groups of
+state width N; dt per head. Heavy einsums run in the model compute dtype
+with f32 accumulation; decay/exp math stays f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder
+from repro.layers.basic import rms_norm
+from repro.kernels import ref as kref
+
+NEG_INF = -1e30
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, G, M, P, N) — SSD state per head
+    conv: jax.Array        # (B, K-1, conv_dim) — conv tail buffer
+
+
+def ssm_init(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    k = cfg.ssm_conv
+    conv_dim = di + 2 * g * n
+
+    def mk(c):
+        c.normal("z_proj", (d, di), ("embed", "ssm_inner"))
+        c.normal("xbc_proj", (d, conv_dim), ("embed", "ssm_inner"))
+        c.normal("dt_proj", (d, h), ("embed", "heads"))
+        c.normal("conv_w", (k, conv_dim), (None, "ssm_inner"), scale=0.5)
+        c.zeros("conv_b", (conv_dim,), ("ssm_inner",))
+        # A in (-1, 0): init A_log so A = -exp(A_log) in [-4, -0.5].
+        c.const("A_log", jnp.log(jnp.linspace(0.5, 4.0, h)), ("heads",))
+        c.ones("D", (h,), ("heads",))
+        c.zeros("dt_bias", (h,), ("heads",))
+        c.ones("norm_scale", (di,), (None,))
+        c.normal("out_proj", (di, d), ("ssm_inner", "embed"))
+    b.sub(name, mk)
+
+
+def _conv(p, xbc: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Depthwise causal conv + silu (the stencil frontend)."""
+    w = p["conv_w"]
+    bias = p["conv_b"]
+    if getattr(cfg, "ssm_conv_impl", "jnp") == "pallas":
+        from repro.kernels import ops
+        y = ops.conv1d(xbc, w.astype(xbc.dtype), bias.astype(xbc.dtype))
+    else:
+        y = kref.conv1d_depthwise_causal(xbc, w.astype(xbc.dtype),
+                                         bias.astype(xbc.dtype))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int, dtype):
+    """Chunked SSD. x (b,l,g,m,p); dt (b,l,g,m); a (g,m); b/c (b,l,g,n).
+
+    Returns (y (b,l,g,m,p), final_state (b,g,m,p,n)).
+    """
+    b, l, g, m, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    q = chunk
+
+    xr = x.reshape(b, nc, q, g, m, p)
+    dtr = dt.reshape(b, nc, q, g, m).astype(jnp.float32)
+    br = bmat.reshape(b, nc, q, g, n)
+    cr = cmat.reshape(b, nc, q, g, n)
+
+    da = dtr * a[None, None, None]              # (b,nc,q,g,m), negative
+    da_cs = jnp.cumsum(da, axis=2)
+    da_sum = da_cs[:, :, -1]                    # (b,nc,g,m)
+
+    # ---- intra-chunk (masked attention-like) ----
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cr.astype(dtype),
+                        br.astype(dtype), preferred_element_type=jnp.float32)
+    dac = da_cs.transpose(0, 1, 3, 4, 2)        # (b,nc,g,m,q)
+    diff = dac[..., :, None] - dac[..., None, :]  # (b,nc,g,m,q,k)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(tril, diff, NEG_INF))
+    w = scores[:, :, :, None] * lmat            # (b,nc,g,m,q,k)
+    dtx = (dtr[..., None] * xr.astype(jnp.float32))  # (b,nc,q,g,m,p)
+    y_diag = jnp.einsum("bcgmqk,bckgmp->bcqgmp", w.astype(dtype),
+                        dtx.astype(dtype), preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    decay_out = jnp.exp(da_sum[:, :, None] - da_cs)     # (b,nc,q,g,m)
+    sdt = (decay_out * dtr)                              # (b,nc,q,g,m)
+    states = jnp.einsum("bckgn,bckgm,bckgmp->bcgmpn",
+                        br.astype(dtype), sdt.astype(dtype),
+                        xr.astype(dtype), preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence ----
+    decay_chunk = jnp.exp(da_sum)                        # (b,nc,g,m)
+
+    def body(s, inp):
+        st_c, dc = inp                                   # (b,g,m,p,n), (b,g,m)
+        prev = s
+        s = s * dc[..., None, None] + st_c
+        return s, prev
+
+    s0 = jnp.zeros((b, g, m, p, n), jnp.float32)
+    states_t = states.transpose(1, 0, 2, 3, 4, 5)
+    decay_t = decay_chunk.transpose(1, 0, 2, 3)
+    final, prev_states = jax.lax.scan(body, s0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (b,nc,g,m,p,n)
+
+    # ---- state -> output within chunk ----
+    state_decay = jnp.exp(da_cs)                         # (b,nc,q,g,m)
+    y_inter = jnp.einsum("bcqgn,bcgmpn->bcqgmp", cr.astype(dtype),
+                         prev_states.astype(dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * state_decay[..., None]
+
+    y = (y_diag + y_inter).reshape(b, l, g, m, p)
+    return y.astype(dtype), final
+
+
+def ssm_block(p, x: jax.Array, cfg: ModelConfig,
+              cache: Optional[SSMCache] = None
+              ) -> tuple[jax.Array, Optional[SSMCache]]:
+    """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj."""
+    dt_ = cfg.dtype
+    bsz, l, _ = x.shape
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    m = h // g
+    pdim = cfg.ssm_head_dim
+    k = cfg.ssm_conv
+
+    from repro.dist.sharding import constrain
+    z = constrain(jnp.einsum("bsd,de->bse", x, p["z_proj"].astype(dt_)),
+                  ("batch", None, "ssm_inner"))
+    xbc = constrain(jnp.einsum("bsd,de->bse", x, p["xbc_proj"].astype(dt_)),
+                    ("batch", None, "ssm_inner"))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(dt_))
+
+    if cache is not None and l == 1:
+        return _ssm_decode_step(p, z, xbc, dt_raw, cfg, cache)
+
+    xbc = _conv(p, xbc, cfg)
+    xs, bc = jnp.split(xbc, [di], axis=-1)
+    bmat, cmat = jnp.split(bc.reshape(bsz, l, 2, g, n), 2, axis=2)
+    bmat, cmat = bmat[:, :, 0], cmat[:, :, 0]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)).reshape(g, m)
+
+    xh = xs.reshape(bsz, l, g, m, pdim)
+    y, final_state = ssd_scan(xh, dt.reshape(bsz, l, g, m), a, bmat, cmat,
+                              cfg.ssm_chunk, dt_)
+    y = y + (p["D"].astype(jnp.float32).reshape(1, 1, g, m, 1)
+             * xh.astype(jnp.float32)).astype(dt_)
+    y = y.reshape(bsz, l, di)
+
+    # Gated RMS norm (mamba2's RMSNormGated): norm(y * silu(z)).
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = rms_norm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+
+    new_cache = None
+    if cache is not None:
+        conv_tail = xbc_tail = None  # set below
+        # Store last K-1 *pre-conv* inputs for decode continuation.
+        xbc_pre = jnp.einsum("bsd,de->bse", x, p["xbc_proj"].astype(dt_))
+        conv_tail = xbc_pre[:, -(k - 1):, :]
+        new_cache = SSMCache(state=final_state, conv=conv_tail)
+    return out, new_cache
+
+
+def _ssm_decode_step(p, z, xbc_new, dt_raw, cfg: ModelConfig, cache: SSMCache):
+    """Single-token state update (O(1) in context length)."""
+    dt_ = cfg.dtype
+    bsz = z.shape[0]
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    m = h // g
+    pdim = cfg.ssm_head_dim
+    k = cfg.ssm_conv
+
+    # Conv over the (K-1)-token tail + the new token: one stencil output.
+    window = jnp.concatenate([cache.conv, xbc_new], axis=1)  # (B, K, conv)
+    wgt = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), wgt)
+    conv_out = conv_out + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(dt_)[:, None, :]      # (B,1,conv)
+    new_conv = window[:, 1:, :]
+
+    xs, bc = jnp.split(xbc[:, 0], [di], axis=-1)
+    bmat, cmat = jnp.split(bc.reshape(bsz, 2, g, n), 2, axis=1)
+    bmat, cmat = bmat[:, 0], cmat[:, 0]                      # (B,g,n)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)).reshape(bsz, g, m)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)).reshape(1, g, m)
+    xh = xs.reshape(bsz, g, m, pdim).astype(jnp.float32)
+
+    da = jnp.exp(dt * a)                                      # (B,g,m)
+    upd = jnp.einsum("bgn,bgm,bgmp->bgmpn", bmat.astype(jnp.float32),
+                     dt, xh)
+    state = cache.state * da[..., None, None] + upd
+    y = jnp.einsum("bgn,bgmpn->bgmp", cmat.astype(jnp.float32), state)
+    y = y + p["D"].astype(jnp.float32).reshape(1, g, m, 1) * xh
+    y = y.reshape(bsz, 1, di).astype(dt_)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = rms_norm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, SSMCache(state=state, conv=new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> SSMCache:
+    dtype = dtype or cfg.dtype
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    m = cfg.ssm_heads // g
+    conv_dim = cfg.d_inner + 2 * g * n
+    return SSMCache(
+        state=jnp.zeros((batch, g, m, cfg.ssm_head_dim, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )

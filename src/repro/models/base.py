@@ -1,0 +1,180 @@
+"""Model configuration and parameter-tree utilities.
+
+Models are pure functions over parameter pytrees (nested dicts of arrays).
+Every parameter is created through :class:`ParamBuilder`, which records a
+parallel pytree of *logical axis names* — ``dist/sharding.py`` maps those to
+mesh axes (DP/FSDP/TP/EP) without the layers knowing about meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 256
+    head_dim: int = 0          # 0 -> d_model // n_heads
+
+    # attention flavour
+    attn_type: str = "gqa"     # gqa | mla
+    qkv_bias: bool = False     # qwen2.5
+    rope_frac: float = 1.0     # fraction of head dims rotated (chatglm: 0.5)
+    rope_theta: float = 10000.0
+    causal: bool = True        # False for encoder-only (hubert)
+
+    # MLA (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE (qwen3-moe)
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_group_size: int = 256       # GShard dispatch group length
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+
+    # hybrid (zamba2): shared attention block applied every k mamba layers
+    hybrid_period: int = 6
+
+    # VLM (internvl2): number of image tokens and raw vision-embed width
+    vlm_image_tokens: int = 0
+    vlm_vision_dim: int = 1024
+
+    # encoder stub (hubert): raw frame-feature width
+    audio_feat_dim: int = 0
+
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16      # activation/compute dtype
+    param_dtype: Any = jnp.float32  # parameter storage dtype
+
+    # execution knobs (overridable per shape-cell by the launcher)
+    remat: str = "full"        # none | full | dots
+    attn_chunk: int = 1024     # kv-chunked attention threshold/chunk
+    scan_layers: bool = True
+    # "jnp" = online-softmax chunked scan (differentiable, GSPMD-native);
+    # "flash" = fused Pallas kernel via shard_map (forward-only: serving).
+    attn_impl: str = "jnp"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 (Megatron-style) so TP sharding divides."""
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOP accounting)."""
+        from repro.models import registry  # lazy; avoids cycle
+        return registry.count_params(self)
+
+
+class ParamBuilder:
+    """Creates parameters and records their logical sharding axes."""
+
+    def __init__(self, key: jax.Array, cfg: ModelConfig):
+        self.key = key
+        self.cfg = cfg
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, name: str, shape: Tuple[int, ...], axes: Tuple[str | None, ...],
+               scale: float | None = None):
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        scale = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+        arr = (jax.random.normal(self._next(), shape, jnp.float32) * scale
+               ).astype(self.cfg.param_dtype)
+        self.params[name] = arr
+        self.specs[name] = axes
+        return arr
+
+    def zeros(self, name, shape, axes):
+        self.params[name] = jnp.zeros(shape, self.cfg.param_dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def ones(self, name, shape, axes):
+        self.params[name] = jnp.ones(shape, self.cfg.param_dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def const(self, name, value, axes):
+        self.params[name] = jnp.asarray(value, self.cfg.param_dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def sub(self, name: str, builder_fn):
+        """Nest a child builder under ``name``."""
+        child = ParamBuilder(self._next(), self.cfg)
+        builder_fn(child)
+        self.params[name] = child.params
+        self.specs[name] = child.specs
+        return child.params
+
+    def done(self):
+        return self.params, self.specs
+
+
+def stack_init(key: jax.Array, n: int, init_one):
+    """vmap an init function to create ``n`` stacked layer param trees.
+
+    ``init_one(key) -> (params, specs)``; returns (stacked params with a
+    leading layer axis, specs with a leading ``"layers"`` axis name).
+    """
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_one(k)[0])(keys)
+    captured = {}
+
+    def spec_pass(k):
+        p, s = init_one(k)
+        captured["s"] = s
+        return p
+
+    jax.eval_shape(spec_pass, jax.random.PRNGKey(0))  # abstract: no allocation
+    specs = jax.tree.map(lambda s: ("layers",) + tuple(s),
+                         captured["s"], is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+def cast_compute(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return x.astype(cfg.dtype)

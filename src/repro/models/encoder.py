@@ -1,0 +1,92 @@
+"""HuBERT-style bidirectional encoder (audio backbone).
+
+The modality frontend (conv feature extractor over raw waveform) is a STUB
+per the assignment: ``input_specs`` provides precomputed frame features
+(B, S, audio_feat_dim); the model projects them to d_model and runs a
+non-causal transformer encoder. Training objective: frame-level CE against
+cluster labels (HuBERT's masked-prediction target, unmasked variant).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder, stack_init
+from repro.layers import basic
+from repro.layers.attention import attention, gqa_init
+from repro.models.lm import _remat
+
+
+class EncoderModel:
+    def __init__(self, cfg: ModelConfig):
+        assert not cfg.causal
+        self.cfg = cfg
+
+    def _layer_init(self, key):
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+        basic.layer_norm_init(b, "ln1", cfg.d_model)
+        gqa_init(b, "attn", cfg)
+        basic.layer_norm_init(b, "ln2", cfg.d_model)
+        basic.gelu_mlp_init(b, "ffn", cfg.d_model, cfg.d_ff)
+        return b.done()
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+
+        def mk(c):
+            c.normal("w", (cfg.audio_feat_dim, cfg.d_model), (None, "embed"))
+            c.zeros("b", (cfg.d_model,), (None,))
+        b.sub("feature_proj", mk)
+        basic.layer_norm_init(b, "ln_f", cfg.d_model)
+
+        def mk_head(c):
+            c.normal("w", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+        b.sub("head", mk_head)
+        params, specs = b.done()
+        lp, ls = stack_init(b._next(), cfg.n_layers, self._layer_init)
+        params["layers"], specs["layers"] = lp, ls
+        return params, specs
+
+    def forward(self, params, batch: Dict[str, jax.Array], cache=None,
+                last_only: bool = False):
+        cfg = self.cfg
+        assert cache is None, "encoder-only model has no decode step"
+        del last_only  # encoder emits all frame logits (vocab is tiny)
+        feats = batch["features"].astype(cfg.dtype)
+        x = jnp.einsum("bsf,fd->bsd", feats,
+                       params["feature_proj"]["w"].astype(cfg.dtype))
+        x = x + params["feature_proj"]["b"].astype(cfg.dtype)
+        bsz, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (bsz, s))
+
+        def body(xc, lp):
+            h, _ = attention(lp["attn"],
+                             basic.layer_norm(lp["ln1"], xc, cfg.norm_eps),
+                             positions, cfg, None)
+            xc = xc + h
+            f = basic.gelu_mlp(lp["ffn"],
+                               basic.layer_norm(lp["ln2"], xc, cfg.norm_eps),
+                               cfg)
+            return xc + f, None
+
+        body = _remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = basic.layer_norm(params["ln_f"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["head"]["w"].astype(cfg.dtype)
+                            ).astype(jnp.float32)
+        return logits, None, {}
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, _, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits[..., :cfg.vocab_size], axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        return ce, {"ce": ce}

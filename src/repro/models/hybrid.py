@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a shared attention block.
+
+Structure (cfg.n_layers total mamba layers, period = cfg.hybrid_period):
+``n_groups = n_layers // period`` groups of ``period`` mamba layers, each
+group preceded by an application of ONE shared transformer block (shared
+weights across all applications, Zamba2's signature trick), plus
+``n_layers % period`` trailing mamba layers. The shared block consumes
+``concat([h, embeddings])`` (width 2d) as in Zamba2.
+
+The shared block's KV caches are per-application (same weights, different
+activations), so serving carries ``n_groups`` KV caches + per-layer SSM
+state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder, stack_init
+from repro.layers import basic
+from repro.layers.attention import attention, gqa_init, init_kv_cache
+from repro.layers.ssm import ssm_init, ssm_block, init_ssm_cache
+from repro.models.lm import _remat, ce_from_hidden
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.hybrid_period
+        self.n_tail = cfg.n_layers % cfg.hybrid_period
+
+    def _mamba_init(self, key):
+        b = ParamBuilder(key, self.cfg)
+        basic.rms_norm_init(b, "ln", self.cfg.d_model)
+        ssm_init(b, "ssm", self.cfg)
+        return b.done()
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+        basic.embedding_init(b, cfg)
+        basic.rms_norm_init(b, "ln_f", cfg.d_model)
+        # Shared transformer block over concat([h, emb]) — width 2d.
+        basic.rms_norm_init(b, "shared_ln1", 2 * cfg.d_model)
+        gqa_init(b, "shared_attn", cfg, in_dim=2 * cfg.d_model)
+        basic.rms_norm_init(b, "shared_ln2", 2 * cfg.d_model)
+        basic.swiglu_init(b, "shared_ffn", 2 * cfg.d_model, cfg.d_ff,
+                          d_out=cfg.d_model)
+        params, specs = b.done()
+        # Grouped mamba stacks: (n_groups, period, ...) + tail (n_tail, ...)
+        gp, gs = stack_init(b._next(), self.n_groups * cfg.hybrid_period,
+                            self._mamba_init)
+        params["groups"], specs["groups"] = (
+            jax.tree.map(lambda a: a.reshape(
+                (self.n_groups, cfg.hybrid_period) + a.shape[1:]), gp),
+            jax.tree.map(lambda s: ("groups", None) + tuple(s[1:]), gs,
+                         is_leaf=lambda x: isinstance(x, tuple)))
+        if self.n_tail:
+            tp, ts = stack_init(b._next(), self.n_tail, self._mamba_init)
+            params["tail"], specs["tail"] = tp, ts
+        return params, specs
+
+    def _shared(self, params, x, emb, positions, kv_cache):
+        cfg = self.cfg
+        cat = jnp.concatenate([x, emb], axis=-1)
+        h, new_kv = attention(params["shared_attn"],
+                              basic.rms_norm(params["shared_ln1"], cat,
+                                             cfg.norm_eps),
+                              positions, cfg, kv_cache)
+        x = x + h
+        cat2 = jnp.concatenate([x, emb], axis=-1)
+        f = basic.swiglu(params["shared_ffn"],
+                         basic.rms_norm(params["shared_ln2"], cat2,
+                                        cfg.norm_eps), cfg)
+        return x + f, new_kv
+
+    def forward_hidden(self, params, batch: Dict[str, jax.Array],
+                       cache: Optional[Dict] = None):
+        cfg = self.cfg
+        emb = basic.embed(params, batch["tokens"], cfg)
+        bsz, s, _ = emb.shape
+        if cache is not None:
+            start = cache["kv"].length[0]
+            positions = jnp.broadcast_to(
+                (start + jnp.arange(s, dtype=jnp.int32))[None], (bsz, s))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                         (bsz, s))
+        x = emb
+
+        def mamba_body(xc, xs):
+            lp, lcache = xs
+            h, new_cache = ssm_block(lp["ssm"],
+                                     basic.rms_norm(lp["ln"], xc, cfg.norm_eps),
+                                     cfg, lcache)
+            return xc + h, new_cache
+
+        mamba_body = _remat(mamba_body, cfg.remat)
+        # The shared block's concat([h, emb]) activations are 2d-wide; remat
+        # it like the mamba layers (§Perf P10 — the single-pod train cell
+        # was 1% over HBM from exactly these).
+        shared = (self._shared if cfg.remat == "none"
+                  else jax.checkpoint(self._shared))
+
+        def group_body(carry, xs):
+            xc = carry
+            gp, g_kv, g_ssm = xs
+            xc, new_kv = shared(params, xc, emb, positions, g_kv)
+            if g_ssm is None:
+                xc, _ = jax.lax.scan(lambda c, lp: mamba_body(c, (lp, None)),
+                                     xc, gp)
+                new_ssm = None
+            else:
+                xc, new_ssm = jax.lax.scan(mamba_body, xc, (gp, g_ssm))
+            return xc, (new_kv, new_ssm)
+
+        if cache is None:
+            x, _ = jax.lax.scan(
+                lambda c, gp: group_body(c, (gp, None, None)),
+                x, params["groups"])
+            new_cache = None
+            if self.n_tail:
+                x, _ = jax.lax.scan(lambda c, lp: mamba_body(c, (lp, None)),
+                                    x, params["tail"])
+        else:
+            x, (new_kv, new_ssm) = jax.lax.scan(
+                group_body, x,
+                (params["groups"], cache["kv"], cache["ssm_groups"]))
+            tail_ssm = None
+            if self.n_tail:
+                x, tail_ssm = jax.lax.scan(mamba_body, x,
+                                           (params["tail"], cache["ssm_tail"]))
+            new_cache = {"kv": new_kv, "ssm_groups": new_ssm,
+                         "ssm_tail": tail_ssm}
+        x = basic.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return x, new_cache, {}
+
+    def forward(self, params, batch, cache: Optional[Dict] = None,
+                last_only: bool = False):
+        cfg = self.cfg
+        x, new_cache, aux = self.forward_hidden(params, batch, cache)
+        if last_only:
+            x = x[:, -1:]
+        logits = basic.unembed(params, x, cfg)
+        return logits, new_cache, aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, _, _ = self.forward_hidden(params, batch)
+        w = (params["embedding"]["table"].astype(cfg.dtype).T
+             if cfg.tie_embeddings
+             else params["embedding"]["head"].astype(cfg.dtype))
+        ce = ce_from_hidden(x, w, batch["labels"], cfg.padded_vocab,
+                            cfg.vocab_size)
+        return ce, {"ce": ce}
+
+    def cache_axes(self):
+        from repro.layers.attention import KVCache
+        from repro.layers.ssm import SSMCache
+        axes = {
+            "kv": KVCache(
+                k=("groups", "batch", "kv_seq", "kv_heads", None),
+                v=("groups", "batch", "kv_seq", "kv_heads", None),
+                length=("groups",)),
+            "ssm_groups": SSMCache(
+                state=("groups", None, "batch", None, "heads", None, None),
+                conv=("groups", None, "batch", None, "ssm_inner")),
+        }
+        if self.n_tail:
+            axes["ssm_tail"] = SSMCache(
+                state=("layers", "batch", None, "heads", None, None),
+                conv=("layers", "batch", None, "ssm_inner"))
+        return axes
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv = [init_kv_cache(cfg, batch, max_len) for _ in range(self.n_groups)]
+        ssm_g = [init_ssm_cache(cfg, batch)
+                 for _ in range(self.n_groups * cfg.hybrid_period)]
+        cache = {
+            "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *kv),
+            "ssm_groups": jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape(
+                    (self.n_groups, cfg.hybrid_period) + xs[0].shape),
+                *ssm_g),
+        }
+        if self.n_tail:
+            ssm_t = [init_ssm_cache(cfg, batch) for _ in range(self.n_tail)]
+            cache["ssm_tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_t)
+        return cache

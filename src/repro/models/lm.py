@@ -1,0 +1,263 @@
+"""Generic decoder-only transformer LM (dense / MoE / MLA / VLM backbone).
+
+One layer = pre-norm attention (GQA or MLA) + pre-norm FFN (SwiGLU or MoE).
+Layers are stacked parameters executed with ``lax.scan`` (keeps HLO size
+O(1) in depth) and rematerialized per ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder, stack_init
+from repro.layers import basic
+from repro.layers.attention import attention, gqa_init, init_kv_cache, KVCache
+from repro.layers.mla import mla_attention, mla_init, init_mla_cache, MLACache
+from repro.layers.moe import moe_init, moe_ffn
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    raise ValueError(f"unknown remat mode {mode!r}")
+
+
+class DecoderLM:
+    """Covers dense llama-likes, qwen2.5, chatglm3, minicpm3 (MLA),
+    qwen3-moe, and the internvl2 text backbone (family == 'vlm')."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----------------------------- init -----------------------------
+
+    def _layer_init(self, key) -> tuple[Dict, Dict]:
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+        basic.rms_norm_init(b, "ln1", cfg.d_model)
+        if cfg.attn_type == "mla":
+            mla_init(b, "attn", cfg)
+        else:
+            gqa_init(b, "attn", cfg)
+        basic.rms_norm_init(b, "ln2", cfg.d_model)
+        if cfg.n_experts:
+            moe_init(b, "ffn", cfg)
+        else:
+            basic.swiglu_init(b, "ffn", cfg.d_model, cfg.d_ff)
+        return b.done()
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+        basic.embedding_init(b, cfg)
+        basic.rms_norm_init(b, "ln_f", cfg.d_model)
+        if cfg.family == "vlm":
+            def mk(c):
+                c.normal("w", (cfg.vlm_vision_dim, cfg.d_model),
+                         (None, "embed"))
+                c.zeros("b", (cfg.d_model,), (None,))
+            b.sub("vision_proj", mk)
+        params, specs = b.done()
+        lp, ls = stack_init(b._next(), cfg.n_layers, self._layer_init)
+        params["layers"], specs["layers"] = lp, ls
+        return params, specs
+
+    # ---------------------------- forward ----------------------------
+
+    def _layer(self, lp, x, positions, cache):
+        cfg = self.cfg
+        h, new_cache = attention_dispatch(lp["attn"],
+                                          basic.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                                          positions, cfg, cache)
+        x = x + h
+        y = basic.rms_norm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            f, aux = moe_ffn(lp["ffn"], y, cfg)
+        else:
+            f, aux = basic.swiglu(lp["ffn"], y, cfg), {}
+        return x + f, new_cache, aux
+
+    def _embed_inputs(self, params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        x = basic.embed(params, batch["tokens"], cfg)
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            img = jnp.einsum("bnd,de->bne",
+                             batch["image_embeds"].astype(cfg.dtype),
+                             params["vision_proj"]["w"].astype(cfg.dtype))
+            img = img + params["vision_proj"]["b"].astype(cfg.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        return x
+
+    def forward_hidden(self, params, batch: Dict[str, jax.Array],
+                       cache: Optional[Any] = None):
+        """Returns (final normed hidden (B, S, D), new_cache, aux)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        bsz, s, _ = x.shape
+        if cache is not None:
+            start = cache_length(cache)
+            positions = start + jnp.arange(s)[None, :].astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (bsz, s))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                         (bsz, s))
+
+        def body(carry, xs):
+            xc, aux_acc = carry
+            lp, lcache = xs
+            xc, new_cache, aux = self._layer(lp, xc, positions, lcache)
+            aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()} \
+                if aux else aux_acc
+            return (xc, aux_acc), new_cache
+
+        zero = jnp.zeros((), jnp.float32)
+        aux0 = ({"moe_lb_loss": zero, "moe_z_loss": zero,
+                 "moe_drop_frac": zero} if cfg.n_experts else {})
+        body = _remat(body, cfg.remat)
+        if cache is None and not cfg.scan_layers:
+            # Unrolled layer loop (validation / small models): same math,
+            # HLO grows O(L).
+            carry = (x, aux0)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                carry, _ = body(carry, (lp, None))
+            (x, aux), new_caches = carry, None
+        elif cache is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, lp: body(c, (lp, None)), (x, aux0), params["layers"])
+            new_caches = None
+        else:
+            (x, aux), new_caches = jax.lax.scan(body, (x, aux0),
+                                                (params["layers"], cache))
+        x = basic.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            aux = {k: v / cfg.n_layers for k, v in aux.items()}
+        return x, new_caches, aux
+
+    def forward(self, params, batch: Dict[str, jax.Array],
+                cache: Optional[Any] = None, last_only: bool = False):
+        """Returns (logits, new_cache, aux). ``last_only`` unembeds only the
+        final position (prefill serving — avoids a (B,S,V) tensor)."""
+        cfg = self.cfg
+        x, new_caches, aux = self.forward_hidden(params, batch, cache)
+        if last_only:
+            x = x[:, -1:]
+        logits = basic.unembed(params, x, cfg)
+        return logits, new_caches, aux
+
+    # ----------------------------- loss -----------------------------
+
+    def _head_weight(self, params):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return params["embedding"]["table"].astype(cfg.dtype).T
+        return params["embedding"]["head"].astype(cfg.dtype)
+
+    def loss(self, params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        x, _, aux = self.forward_hidden(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            # image positions carry no next-token loss; hidden states for
+            # the text segment start after the image tokens.
+            n_img = batch["image_embeds"].shape[1]
+            x = x[:, n_img:]
+        ce = ce_from_hidden(x, self._head_weight(params), labels,
+                            cfg.padded_vocab, cfg.vocab_size)
+        total = ce
+        if aux:
+            total = total + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+        metrics = {"ce": ce, **{k: jnp.asarray(v) for k, v in aux.items()}}
+        return total, metrics
+
+    # --------------------------- serving ---------------------------
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+
+        def one(_):
+            if cfg.attn_type == "mla":
+                return init_mla_cache(cfg, batch, max_len)
+            return init_kv_cache(cfg, batch, max_len)
+
+        caches = [one(i) for i in range(cfg.n_layers)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    def cache_axes(self):
+        """Logical sharding axes for the cache tree (see dist/sharding.py)."""
+        if self.cfg.attn_type == "mla":
+            return MLACache(c_kv=("layers", "batch", "kv_seq", None),
+                            k_rope=("layers", "batch", "kv_seq", None),
+                            length=("layers",))
+        return KVCache(k=("layers", "batch", "kv_seq", "kv_heads", None),
+                       v=("layers", "batch", "kv_seq", "kv_heads", None),
+                       length=("layers",))
+
+
+def attention_dispatch(p, x, positions, cfg: ModelConfig, cache):
+    if cfg.attn_type == "mla":
+        return mla_attention(p, x, positions, cfg, cache)
+    return attention(p, x, positions, cfg, cache)
+
+
+def cache_length(cache) -> jax.Array:
+    """All layers share the same length; read layer 0's."""
+    leaves = jax.tree.leaves(cache)
+    # length leaves are int32 scalars stacked over layers
+    for leaf in leaves:
+        if leaf.ndim == 1 and jnp.issubdtype(leaf.dtype, jnp.integer):
+            return leaf[0]
+    raise ValueError("cache has no length leaf")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, padded_vocab: int,
+                  true_vocab: int) -> jax.Array:
+    """Mean next-token CE; padded vocab ids masked out of the softmax."""
+    logits = logits + _pad_mask(padded_vocab, true_vocab)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _pad_mask(padded_vocab: int, true_vocab: int) -> jax.Array:
+    """-inf additive bias over the padded vocab tail."""
+    ids = jnp.arange(padded_vocab)
+    return jnp.where(ids < true_vocab, 0.0, -1e30).astype(jnp.float32)
+
+
+def ce_from_hidden(x: jax.Array, w: jax.Array, labels: jax.Array,
+                   padded_vocab: int, true_vocab: int,
+                   chunk: int = 512) -> jax.Array:
+    """Sequence-chunked CE straight from hidden states.
+
+    Never materializes the (B, S, V) logits tensor — at 4k/32k sequence and
+    150k vocab that tensor dominates HBM otherwise. The per-chunk logits
+    (B, chunk, V) are computed, reduced to (logz, gold), and discarded.
+    """
+    bsz, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back (small odd sequences in tests)
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(bsz, nc, chunk).transpose(1, 0, 2)
+    mask = _pad_mask(padded_vocab, true_vocab)
+
+    def body(acc, inp):
+        xb, lb = inp
+        logits = jnp.einsum("bcd,dv->bcv", xb, w,
+                            preferred_element_type=jnp.float32) + mask
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (bsz * s)

@@ -1,0 +1,45 @@
+"""Model factory + analytic parameter accounting."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from repro.models.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    from repro.models.lm import DecoderLM
+    from repro.models.ssm_lm import MambaLM
+    from repro.models.hybrid import HybridLM
+    from repro.models.encoder import EncoderModel
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "encoder":
+        return EncoderModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via abstract init (no allocation)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k)[0],
+                            jax.random.PRNGKey(0))
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active (per-token) parameters — differs from total only for MoE."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    per_layer_expert = 3 * cfg.d_model * cfg.d_ff  # swiglu slab per expert
+    inactive = (cfg.n_experts - cfg.experts_per_token) * per_layer_expert \
+        * cfg.n_layers
+    return total - inactive

@@ -1,0 +1,85 @@
+"""Mamba2 language model (attention-free; SSD blocks only)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, ParamBuilder, stack_init
+from repro.layers import basic
+from repro.layers.ssm import ssm_init, ssm_block, init_ssm_cache
+from repro.models.lm import _remat, ce_from_hidden
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _layer_init(self, key):
+        b = ParamBuilder(key, self.cfg)
+        basic.rms_norm_init(b, "ln", self.cfg.d_model)
+        ssm_init(b, "ssm", self.cfg)
+        return b.done()
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        b = ParamBuilder(key, cfg)
+        basic.embedding_init(b, cfg)
+        basic.rms_norm_init(b, "ln_f", cfg.d_model)
+        params, specs = b.done()
+        lp, ls = stack_init(b._next(), cfg.n_layers, self._layer_init)
+        params["layers"], specs["layers"] = lp, ls
+        return params, specs
+
+    def forward_hidden(self, params, batch: Dict[str, jax.Array],
+                       cache: Optional[Any] = None):
+        cfg = self.cfg
+        x = basic.embed(params, batch["tokens"], cfg)
+
+        def body(xc, xs):
+            lp, lcache = xs
+            h, new_cache = ssm_block(lp["ssm"],
+                                     basic.rms_norm(lp["ln"], xc, cfg.norm_eps),
+                                     cfg, lcache)
+            return xc + h, new_cache
+
+        body = _remat(body, cfg.remat)
+        if cache is None:
+            x, _ = jax.lax.scan(lambda c, lp: body(c, (lp, None)),
+                                x, params["layers"])
+            new_caches = None
+        else:
+            x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+        x = basic.rms_norm(params["ln_f"], x, cfg.norm_eps)
+        return x, new_caches, {}
+
+    def forward(self, params, batch, cache: Optional[Any] = None,
+                last_only: bool = False):
+        cfg = self.cfg
+        x, new_caches, aux = self.forward_hidden(params, batch, cache)
+        if last_only:
+            x = x[:, -1:]
+        logits = basic.unembed(params, x, cfg)
+        return logits, new_caches, aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, _, _ = self.forward_hidden(params, batch)
+        w = (params["embedding"]["table"].astype(cfg.dtype).T
+             if cfg.tie_embeddings
+             else params["embedding"]["head"].astype(cfg.dtype))
+        ce = ce_from_hidden(x, w, batch["labels"], cfg.padded_vocab,
+                            cfg.vocab_size)
+        return ce, {"ce": ce}
+
+    def init_cache(self, batch: int, max_len: int = 0):
+        cfg = self.cfg
+        caches = [init_ssm_cache(cfg, batch) for _ in range(cfg.n_layers)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    def cache_axes(self):
+        from repro.layers.ssm import SSMCache
+        return SSMCache(
+            state=("layers", "batch", None, "heads", None, None),
+            conv=("layers", "batch", None, "ssm_inner"))

@@ -1,0 +1,188 @@
+"""Three-term roofline analysis from compiled (AOT) artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. Terms:
+
+  compute    = HLO_FLOPs / (chips * peak)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = collective_bytes_per_device / link_bw   (ring estimates)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, all
+devices); collective bytes are parsed from the compiled HLO text with
+per-op ring-algorithm traffic factors and the participant count from
+``replica_groups``. Cross-pod (DCI) traffic is reported separately when a
+"pod" mesh axis exists — DCI bandwidth is far below ICI and dominates if
+touched per-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link (one direction)
+    "dci_bw": 6.25e9,          # bytes/s per chip inter-pod (assumed 50 Gbit)
+    "tdp_watts": 215.0,        # chip TDP for the modeled-energy table
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_NEW_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[N]
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+    total_bytes: int          # per-device ring-estimate bytes over ICI
+    cross_pod_bytes: int      # portion whose group spans > one pod
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      pod_size: int | None = None) -> CollectiveStats:
+    bytes_by_op: dict[str, float] = {}
+    count_by_op: dict[str, int] = {}
+    total = 0.0
+    cross = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op").replace("-start", "")
+        size = _shape_bytes(m.group("shape"))
+        n = max(2, _group_size(line, n_devices))
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            b = 2.0 * size * ring
+        elif op == "all-gather":
+            b = size * ring                  # LHS is the gathered result
+        elif op == "reduce-scatter":
+            b = size * (n - 1)               # LHS is the scattered result
+        elif op == "all-to-all":
+            b = size * ring
+        else:  # collective-permute
+            b = size
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + b
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+        total += b
+        if pod_size and n > pod_size:
+            cross += b
+    return CollectiveStats(bytes_by_op, count_by_op, int(total), int(cross))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # whole-program HLO flops
+    hbm_bytes: float           # whole-program bytes accessed
+    coll_bytes: int            # per-device collective bytes (ICI estimate)
+    cross_pod_bytes: int
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0  # model_flops / hlo_flops
+    bound_s: float = 0.0       # max of the three terms
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, n_devices: int, model_flops: float = 0.0,
+            pod_size: int | None = None, hw: dict = V5E) -> Roofline:
+    """Loop-aware roofline from the partitioned HLO.
+
+    The SPMD module carries per-partition (local) shapes, so loop-aware dot
+    FLOPs / collective bytes / HBM proxy are already per-chip quantities.
+    XLA's own cost_analysis visits while bodies once (useless under
+    scan-over-layers x grad-accumulation); see hlo_analysis.py, validated
+    against an unrolled compile in tests/test_hlo_analysis.py.
+    """
+    from repro.hlo_analysis import analyze_hlo
+    la = analyze_hlo(compiled.as_text(), n_devices, pod_size)
+    flops_per_dev = la.dot_flops
+    hbm_per_dev = la.hbm_proxy_bytes
+
+    compute_s = flops_per_dev / hw["peak_flops"]
+    memory_s = hbm_per_dev / hw["hbm_bw"]
+    collective_s = (la.collective_bytes - la.cross_pod_bytes) / hw["ici_bw"]
+    if pod_size and la.cross_pod_bytes:
+        collective_s += la.cross_pod_bytes / hw["dci_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_per_dev * n_devices
+    return Roofline(
+        flops=total_flops, hbm_bytes=hbm_per_dev * n_devices,
+        coll_bytes=int(la.collective_bytes),
+        cross_pod_bytes=int(la.cross_pod_bytes), n_devices=n_devices,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops if total_flops else 0.0),
+        bound_s=max(terms.values()),
+    )
+
+
+def memory_per_device(compiled) -> dict:
+    """Bytes per device from memory_analysis (backend-dependent fields)."""
+    ma = compiled.memory_analysis()
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    out["total_nonalias"] = (out.get("argument_size_in_bytes", 0)
+                             + out.get("output_size_in_bytes", 0)
+                             + out.get("temp_size_in_bytes", 0)
+                             - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def model_flops_train(n_params_active: int, tokens: int) -> float:
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_infer(n_params_active: int, tokens: int) -> float:
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,106 @@
+"""Serving engine: batched prefill + decode with slot-based batching.
+
+``ServeEngine`` keeps a fixed-size batch of request slots (continuous
+batching lite): prefill fills a slot's cache region, decode advances all
+active slots one token per step, finished slots are immediately refillable.
+Works with every cached model family (GQA / MLA latent / SSM state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 -> greedy
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_size: int, max_len: int,
+                 eos_id: int | None = None, rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.key = jax.random.PRNGKey(rng_seed)
+
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # --------------- jitted kernels ---------------
+
+    def _prefill_impl(self, params, tokens):
+        cache = self.model.init_cache(tokens.shape[0], self.max_len)
+        logits, cache, _ = self.model.forward(params, {"tokens": tokens},
+                                              cache, last_only=True)
+        return logits[:, 0], cache
+
+    def _decode_impl(self, params, cache, tokens):
+        logits, cache, _ = self.model.forward(params, {"tokens": tokens},
+                                              cache)
+        return logits[:, 0], cache
+
+    # --------------- request loop ---------------
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests with a shared fixed batch.
+
+        Requests are grouped into waves of ``batch_size`` with equal-length
+        left-padded prompts (simplified admission policy).
+        """
+        out = []
+        for i in range(0, len(requests), self.batch):
+            out.extend(self._wave(requests[i:i + self.batch]))
+        return out
+
+    def _wave(self, reqs: List[Request]) -> List[Request]:
+        n = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j, plen - len(r.prompt):] = r.prompt  # left pad with 0
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        cur = self._pick(logits, reqs)
+        for j, r in enumerate(reqs):
+            r.generated.append(int(cur[j]))
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur)[:, None])
+            cur = self._pick(logits, reqs)
+            alive = 0
+            for j, r in enumerate(reqs):
+                if r.done or len(r.generated) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                t = int(cur[j])
+                r.generated.append(t)
+                if self.eos is not None and t == self.eos:
+                    r.done = True
+                else:
+                    alive += 1
+            if alive == 0:
+                break
+        for r in reqs:
+            r.done = True
+        return reqs
+
+    def _pick(self, logits, reqs) -> np.ndarray:
+        self.key, sub = jax.random.split(self.key)
+        temps = np.zeros((self.batch,), np.float32)
+        for j, r in enumerate(reqs):
+            temps[j] = r.temperature
+        return np.asarray(sample(sub, logits, jnp.asarray(temps)))

@@ -1,0 +1,14 @@
+"""Token sampling: greedy / temperature (per-request mixed batches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key: jax.Array, logits: jax.Array,
+           temperature: jax.Array) -> jax.Array:
+    """logits (B, V); temperature (B,) with 0 == greedy. Returns (B,) ids."""
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, logits / t, axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

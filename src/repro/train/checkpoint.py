@@ -1,0 +1,127 @@
+"""Checkpointing: atomic, resumable, optionally asynchronous.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``meta.json``, written to a
+``.tmp`` sibling and atomically renamed — a crash mid-write never corrupts
+the latest checkpoint. ``save_async`` snapshots device arrays to host
+first (cheap) and writes on a background thread so the train loop never
+blocks on disk. ``latest_step``/``restore`` implement ``--resume auto``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: dict | None = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(l))
+              for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-on-thread. One outstanding write at a time
+    (a second save waits for the first — bounded memory)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save_async(self, step: int, tree: Any, meta: dict | None = None):
+        self.wait()
+        # Device -> host snapshot happens NOW (so training can mutate state).
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        snapshot = jax.tree.unflatten(treedef, host_leaves)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, snapshot, meta, self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure (and shardings) of ``like``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        leaves, treedef = _flatten(like)
+        if len(leaves) != len(data.files):
+            raise ValueError(
+                f"checkpoint has {len(data.files)} leaves, expected "
+                f"{len(leaves)} — model/optimizer structure changed?")
+        new_leaves = []
+        for i, l in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            if arr.dtype.kind == "V" and hasattr(l, "dtype") \
+                    and arr.dtype.itemsize == np.dtype(l.dtype).itemsize:
+                # ml_dtypes (bf16/f8) roundtrip through npz as raw bytes
+                arr = arr.view(l.dtype)
+            if hasattr(l, "sharding") and hasattr(l, "shape"):
+                if tuple(arr.shape) != tuple(l.shape):
+                    raise ValueError(f"leaf {i}: shape {arr.shape} != {l.shape}")
+                arr = jax.device_put(arr.astype(l.dtype), l.sharding)
+            new_leaves.append(arr)
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def read_meta(ckpt_dir: str, step: int) -> dict:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

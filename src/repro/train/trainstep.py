@@ -1,0 +1,75 @@
+"""Train-step builder: value_and_grad + microbatched gradient accumulation.
+
+``accum_steps > 1`` splits the global batch into microbatches scanned on
+device with f32 gradient accumulation — the standard way the big cells fit
+HBM (see EXPERIMENTS.md §Perf for the per-cell tuning).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+
+
+def make_train_step(model, opt: Optimizer, accum_steps: int = 1,
+                    accum_dtype=jnp.float32):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``accum_dtype=bfloat16`` halves the gradient-accumulation buffer and
+    its read-modify-write traffic (§Perf iteration P5; fine at <=16
+    microbatches where the accumulated magnitudes stay in bf16 range).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss.astype(jnp.float32), metrics
+
+    def train_step(state: TrainState, batch):
+        params, opt_state = state
+        if accum_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, m_acc = acc
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+                m_acc = jax.tree.map(lambda a, m: a + m, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            m0 = jax.eval_shape(lambda: loss_fn(params, jax.tree.map(
+                lambda x: x[0], micro))[1])
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), m0)
+            (grads, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m / accum_steps, msum)
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def init_state(model, opt: Optimizer, key) -> tuple[TrainState, Any]:
+    params, specs = model.init(key)
+    return TrainState(params, opt.init(params)), specs

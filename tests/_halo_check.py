@@ -1,0 +1,69 @@
+"""Subprocess worker: distributed Jacobi must equal the single-device sweep.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent test
+sets this). Exercises 1-D and 2-D decompositions, halo depths 1/2/4, and
+overlap on/off. Exits non-zero on any mismatch.
+"""
+import os
+import sys
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), \
+    "parent must set XLA_FLAGS"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.stencil import make_laplace_problem  # noqa: E402
+from repro.core.decomp import split_ringed, join_ringed  # noqa: E402
+from repro.core import halo  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+
+def main():
+    ndev = len(jax.devices())
+    assert ndev == 8, f"expected 8 host devices, got {ndev}"
+
+    u = make_laplace_problem(64, 128, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    u = u.at[1:-1, 1:-1].set(jax.random.uniform(key, (64, 128)))
+
+    cases = []
+    for mesh_shape, axes, row_axis, col_axis in [
+        ((8,), ("x",), "x", None),          # 1-D row decomposition
+        ((4, 2), ("x", "y"), "x", "y"),     # 2-D decomposition
+        ((2, 4), ("x", "y"), "x", "y"),
+        ((8, 1), ("x", "y"), "x", "y"),
+    ]:
+        for depth in (1, 2, 4):
+            for overlap in (True, False):
+                cases.append((mesh_shape, axes, row_axis, col_axis, depth, overlap))
+
+    iters = 8
+    want = u
+    for _ in range(iters):
+        want = ref.jacobi_step(want)
+    want_int = np.asarray(want[1:-1, 1:-1])
+
+    failures = 0
+    for mesh_shape, axes, row_axis, col_axis, depth, overlap in cases:
+        mesh = jax.make_mesh(mesh_shape, axes)
+        interior, bc = split_ringed(u)
+        step = halo.make_distributed_step(
+            mesh, row_axis=row_axis, col_axis=col_axis, depth=depth,
+            overlap=overlap)
+        got = halo.jacobi_run_distributed(interior, bc, iters, step,
+                                          depth=depth)
+        got = np.asarray(jax.device_get(got))
+        ok = np.allclose(got, want_int, rtol=1e-5, atol=1e-6)
+        tag = f"mesh={mesh_shape} depth={depth} overlap={overlap}"
+        if not ok:
+            print(f"FAIL {tag} maxerr={np.abs(got - want_int).max()}")
+            failures += 1
+        else:
+            print(f"ok   {tag}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Core stencil library: solver behaviour + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stencil as S
+from repro.core import jacobi as J
+from repro.core.decomp import split_ringed, join_ringed
+from repro.kernels import ops, ref
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        S.StencilSpec(offsets=((1, 0),), weights=(0.5, 0.5))
+    with pytest.raises(ValueError):
+        S.StencilSpec(offsets=((1, 0), (1,)), weights=(0.5, 0.5))
+    spec = S.jacobi_2d_5pt()
+    assert spec.radius == 1 and spec.ndim == 2 and spec.taps == 4
+
+
+def test_apply_stencil_matches_manual():
+    u = jnp.arange(6 * 8, dtype=jnp.float32).reshape(6, 8)
+    out = S.apply_stencil(u, S.jacobi_2d_5pt())
+    manual = 0.25 * (u[0:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, 0:-2] + u[1:-1, 2:])
+    np.testing.assert_allclose(np.asarray(out[1:-1, 1:-1]), np.asarray(manual))
+    # ring untouched
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(u[0]))
+
+
+def test_jacobi_converges_to_linear_profile():
+    """Laplace with left=1, right=0, top/bottom = linear profile -> the
+    analytic steady state is the linear interpolation (exact test)."""
+    nx, ny = 16, 16
+    prof = S.direct_solution_1d_profile(nx, 1.0, 0.0)
+    u = S.make_laplace_problem(ny, nx, left=1.0, right=0.0)
+    full_prof = jnp.concatenate([jnp.array([1.0]), prof, jnp.array([0.0])])
+    u = u.at[0, :].set(full_prof)
+    u = u.at[-1, :].set(full_prof)
+    out, iters, res = J.jacobi_solve(u, tol=1e-6, max_iters=20000, check_every=100)
+    got_mid = np.asarray(out[ny // 2, 1:-1])
+    np.testing.assert_allclose(got_mid, np.asarray(prof), atol=2e-4)
+    assert float(res) < 1e-6
+    assert int(iters) < 20000
+
+
+def test_jacobi_run_fixed_iters_equals_manual_loop():
+    u = S.make_laplace_problem(12, 16)
+    want = u
+    for _ in range(7):
+        want = ref.jacobi_step(want)
+    got = J.jacobi_run(u, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_temporal_driver_matches_plain():
+    u = S.make_laplace_problem(32, 128)
+    u = u.at[1:-1, 1:-1].set(jax.random.uniform(jax.random.PRNGKey(0), (32, 128)))
+    plain = J.jacobi_run(u, 8)
+    tstep = ops.make_step_fn("v2", t=4, bm=16, interpret=True)
+    fused = J.jacobi_run_temporal(u, 8, tstep, t=4)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(plain), rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        J.jacobi_run_temporal(u, 7, tstep, t=4)
+
+
+def test_split_join_roundtrip():
+    u = S.make_laplace_problem(8, 8)
+    interior, bc = split_ringed(u)
+    v = join_ringed(interior, bc)
+    np.testing.assert_array_equal(np.asarray(v[1:-1, :]), np.asarray(u[1:-1, :]))
+    np.testing.assert_array_equal(np.asarray(v[:, 1:-1]), np.asarray(u[:, 1:-1]))
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis): invariants of the Jacobi operator
+# ---------------------------------------------------------------------------
+
+grids = st.tuples(st.integers(4, 24), st.integers(4, 24))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30))
+def test_property_max_principle(shape, seed):
+    """Jacobi sweep output is bounded by the input's min/max (averaging)."""
+    ny, nx = shape
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.uniform(key, (ny + 2, nx + 2), minval=-3.0, maxval=5.0)
+    out = S.apply_stencil(u, S.jacobi_2d_5pt())
+    assert float(out.max()) <= float(u.max()) + 1e-6
+    assert float(out.min()) >= float(u.min()) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30))
+def test_property_linearity(shape, seed):
+    """The stencil operator is linear: A(au + bv) = aA(u) + bA(v)."""
+    ny, nx = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (ny + 2, nx + 2))
+    v = jax.random.normal(k2, (ny + 2, nx + 2))
+    spec = S.jacobi_2d_5pt()
+    lhs = S.apply_stencil(2.0 * u + 3.0 * v, spec)
+    rhs = 2.0 * S.apply_stencil(u, spec) + 3.0 * S.apply_stencil(v, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30), t=st.integers(1, 4))
+def test_property_kernel_equals_ref_random(shape, seed, t):
+    """Pallas kernels agree with the oracle on arbitrary grids (hypothesis)."""
+    ny, nx = shape
+    nx = max(8, nx)
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (ny + 2, nx + 2), jnp.float32)
+    want = ref.jacobi_multi(u, t)
+    got = ops.jacobi_step(u, version="v2", bm=4, t=t, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_constant_field_is_fixed_point(seed):
+    """A constant grid (matching BCs) is a fixed point of the sweep."""
+    c = float(jax.random.uniform(jax.random.PRNGKey(seed), ()))
+    u = jnp.full((10, 12), c, jnp.float32)
+    out = S.apply_stencil(u, S.jacobi_2d_5pt())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u), rtol=1e-6)

@@ -1,0 +1,19 @@
+"""Distributed halo-exchange correctness (runs the 8-device subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_jacobi_matches_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_halo_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, f"\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"

@@ -1,0 +1,45 @@
+"""Conv1d stencil kernel vs pure-jnp oracle, shape/dtype sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import ops
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,l,d,k", [
+    (1, 64, 128, 4),
+    (2, 128, 256, 4),
+    (3, 96, 128, 3),
+    (1, 32, 384, 2),
+])
+def test_conv1d_matches_ref(b, l, d, k, dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, l, d), jnp.float32).astype(dtype)
+    w = (jax.random.normal(k2, (k, d), jnp.float32) * 0.5).astype(dtype)
+    bias = jax.random.normal(k3, (d,), jnp.float32).astype(dtype)
+    want = ref.conv1d_depthwise_causal(x, w, bias)
+    got = ops.conv1d(x, w, bias, bl=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_conv1d_no_bias_and_causality():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 64, 128), jnp.float32)
+    w = jnp.ones((4, 128), jnp.float32)
+    got = ops.conv1d(x, w, None, bl=16, interpret=True)
+    want = ref.conv1d_depthwise_causal(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # Causality: output at t must not depend on x[t+1:].
+    x2 = x.at[:, 32:, :].set(0.0)
+    got2 = ops.conv1d(x2, w, None, bl=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2[:, :32]), np.asarray(got[:, :32]),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,57 @@
+"""Flash-attention kernel vs the pure-jnp oracle (full softmax attention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_local
+
+
+def _ref_attention(q, k, v, causal):
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores * hd ** -0.5
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return ctx.reshape(b, sq, h, hd)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kh,hd,causal", [
+    (2, 128, 4, 2, 32, True),
+    (1, 256, 8, 8, 16, True),
+    (2, 128, 4, 1, 32, False),
+    (1, 64, 2, 2, 64, True),
+])
+def test_flash_matches_reference(b, s, h, kh, hd, causal, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(keys[1], (b, s, kh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(keys[2], (b, s, kh, hd), jnp.float32).astype(dtype)
+    got = flash_attention_local(q, k, v, causal=causal, bq=64, bk=64,
+                                interpret=True)
+    want = _ref_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), causal)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **tol)
+
+
+def test_flash_block_shape_independence():
+    """Different (bq, bk) tilings must give identical results."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, 128, 4, 32))
+    k = jax.random.normal(keys[1], (1, 128, 2, 32))
+    v = jax.random.normal(keys[2], (1, 128, 2, 32))
+    a = flash_attention_local(q, k, v, bq=32, bk=64, interpret=True)
+    c = flash_attention_local(q, k, v, bq=128, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-5,
+                               atol=2e-5)

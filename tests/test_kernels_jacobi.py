@@ -1,0 +1,70 @@
+"""Per-kernel allclose validation against the pure-jnp oracle (ref.py).
+
+Shape/dtype sweeps in interpret mode, per the deliverable spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stencil import make_laplace_problem
+from repro.kernels import ref
+from repro.kernels import ops
+
+
+def _problem(ny, nx, dtype, seed=0):
+    u = make_laplace_problem(ny, nx, dtype=dtype)
+    key = jax.random.PRNGKey(seed)
+    noise = jax.random.uniform(key, (ny, nx), dtype=jnp.float32)
+    return u.at[1:-1, 1:-1].set(noise.astype(dtype))
+
+
+SHAPES = [(32, 128), (64, 256), (30, 128), (128, 384), (8, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+VERSIONS = ["v0", "v1", "v1db"]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("version", VERSIONS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_single_step_matches_ref(version, dtype, shape):
+    ny, nx = shape
+    u = _problem(ny, nx, dtype)
+    want = ref.jacobi_step(u)
+    got = ops.jacobi_step(u, version=version, bm=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("t", [1, 2, 4, 7])
+@pytest.mark.parametrize("shape", [(32, 128), (64, 256)])
+def test_temporal_matches_t_ref_steps(dtype, t, shape):
+    ny, nx = shape
+    u = _problem(ny, nx, dtype)
+    want = ref.jacobi_multi(u, t)
+    got = ops.jacobi_step(u, version="v2", bm=16, t=t, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("version", VERSIONS + ["v2"])
+def test_boundary_ring_is_preserved(version):
+    u = _problem(32, 128, jnp.float32)
+    got = ops.jacobi_step(u, version=version, bm=16, t=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0, :]), np.asarray(u[0, :]))
+    np.testing.assert_array_equal(np.asarray(got[-1, :]), np.asarray(u[-1, :]))
+    np.testing.assert_array_equal(np.asarray(got[:, 0]), np.asarray(u[:, 0]))
+    np.testing.assert_array_equal(np.asarray(got[:, -1]), np.asarray(u[:, -1]))
+
+
+@pytest.mark.parametrize("bm", [1, 2, 8, 30])
+def test_odd_block_sizes(bm):
+    u = _problem(30, 128, jnp.float32)
+    want = ref.jacobi_step(u)
+    got = ops.jacobi_step(u, version="v1", bm=bm, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,77 @@
+"""Sharding policy unit tests: divisibility fallbacks, axis-reuse, rules."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+
+from repro.dist.sharding import pspec_for, DEFAULT_RULES, ACT_RULES  # noqa: E402
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by pspec_for."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_weight_fsdp_tp():
+    # attention wq (d_model, heads*hd): FSDP on embed, TP on heads
+    assert pspec_for(("embed", "heads"), (4096, 4096), POD) == \
+        P("data", "model")
+    # multipod: embed spans pods
+    assert pspec_for(("embed", "heads"), (4096, 4096), MULTI) == \
+        P(("pod", "data"), "model")
+
+
+def test_kv_heads_fallback_to_seq():
+    # qwen2.5 kv cache: 2 kv heads can't take model=16; kv_seq picks it up
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    spec = pspec_for(axes, (36, 128, 32768, 2, 128), POD)
+    assert spec == P(None, "data", "model", None, None)
+    # deepseek: 32 kv heads take model; seq unsharded
+    spec = pspec_for(axes, (30, 128, 32768, 32, 128), POD)
+    assert spec == P(None, "data", None, "model", None)
+
+
+def test_batch_one_falls_back_unsharded():
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    spec = pspec_for(axes, (81, 1, 524288, 32, 112), POD)
+    assert spec == P(None, None, "data", "model", None)
+
+
+def test_no_axis_reuse_within_leaf():
+    # two embed dims: only the first takes data
+    spec = pspec_for(("embed", "embed"), (4096, 4096), POD)
+    assert spec == P("data", None)
+
+
+def test_act_rules_qseq_context_parallel_fallback():
+    # MLA: 40 heads don't divide 16 -> query-seq picks up model
+    spec = pspec_for(("batch", "qseq", "heads", None), (32, 32768, 40, 96),
+                     POD, ACT_RULES)
+    assert spec == P("data", "model", None, None)
+    # GQA with divisible heads: heads win, qseq stays local
+    spec = pspec_for(("batch", "qseq", "heads", None), (32, 32768, 32, 128),
+                     POD, ACT_RULES)
+    assert spec == P("data", None, "model", None)
+    # scores: kv_heads=4 fails, group dim (heads) takes model
+    spec = pspec_for(("batch", "kv_heads", "heads", "qseq", None),
+                     (16, 4, 16, 4096, 1024), POD, ACT_RULES)
+    assert spec == P("data", None, "model", None, None)
+
+
+def test_expert_parallel():
+    spec = pspec_for(("expert", "embed", "mlp"), (128, 4096, 1536), POD)
+    assert spec == P("model", "data", None)
+
+
+def test_real_mesh_end_to_end():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = pspec_for(("embed", "mlp"), (64, 128), mesh)
+    # axis size 1 divides everything
+    assert spec == P("data", "model")
