@@ -58,3 +58,27 @@ def model_jacobi_gpts(bytes_per_point: float, flops_per_point: float = 5.0,
     bw_pts = HBM_BW / max(bytes_per_point, 1e-9)
     vpu_pts = VPU_FLOPS / flops_per_point
     return chips * min(bw_pts, vpu_pts) / 1e9
+
+
+def engine_variant_rows(spec=None, dtype=None, t: int = 8):
+    """Benchmark variants enumerated from the engine's policy registry.
+
+    Yields ``(row_name, policy_name, step_kwargs, bytes_per_point)`` — the
+    pure-jnp reference first, then every registered policy in paper-arc
+    order. This is the single source the version tables iterate over; no
+    hand-written kernel list exists anywhere in benchmarks/.
+    """
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.core.stencil import jacobi_2d_5pt
+
+    spec = spec or jacobi_2d_5pt()
+    db = jnp.dtype(dtype or jnp.bfloat16).itemsize
+    rows = [("jacobi_ref", "reference", {}, db * 2.0)]  # XLA-fused single pass
+    for p in engine.registry():
+        kw = {"t": t} if p.fused else {}
+        suffix = f"_t{t}" if p.fused else ""
+        rows.append((f"jacobi_{p.name}{suffix}", p.name, kw,
+                     p.bytes_per_point(spec, db, t)))
+    return rows

@@ -4,52 +4,43 @@ Paper (one Tensix core, 512x512, BF16):  CPU 1C 1.41 GPt/s; initial 0.0065;
 write-optimised 0.0072; double-buffered 0.0140 GPt/s. The 163x gap between
 the initial and optimised (§VI: 1.06) versions is the paper's core story.
 
-Here: same grid, our kernel generations. ``us_per_call`` is CPU interpret
-wall time (relative); ``derived`` is modeled v5e GPt/s from per-version
-bytes/point (the architecture story transfers: v0's replicated shifted
-reads cost ~5x the traffic of v1's single pass; v2 divides traffic by T).
+Here: same grid, the engine's policy registry enumerated end-to-end (the
+reference plus every registered execution policy — no hand-written variant
+list). ``us_per_call`` is CPU interpret wall time (relative); ``derived``
+is modeled v5e GPt/s from the registry's per-policy bytes/point model (the
+architecture story transfers: ``shifted``'s replicated reads cost ~(taps+2)x
+the traffic of ``rowchunk``'s single pass; ``temporal`` divides traffic by T).
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.stencil import make_laplace_problem
-from repro.kernels import ops
-from benchmarks.common import time_fn, row, model_jacobi_gpts
+from repro import engine
+from repro.core.stencil import jacobi_2d_5pt, make_laplace_problem
+from repro.kernels import ref
+from benchmarks.common import engine_variant_rows, time_fn, row, model_jacobi_gpts
 
 GRID = (512, 512)
 DTYPE = jnp.bfloat16
-
-# bytes per interior point per sweep (read + write, bf16=2B)
-BYTES_PER_POINT = {
-    "ref": 2 * (1 + 1),          # XLA-fused single pass
-    "v0": 2 * (5 + 1),           # 4 shifted copies materialized + out (+in)
-    "v1": 2 * (1 + 1),           # single contiguous pass + halo (amortized)
-    "v1db": 2 * (1 + 1),
-    "v2_t8": 2 * (1 + 1) / 8.0,  # temporal blocking: T sweeps per pass
-}
+T = 8
 
 
 def run():
     rows = []
+    spec = jacobi_2d_5pt()
     u = make_laplace_problem(*GRID, dtype=DTYPE)
     u = u.at[1:-1, 1:-1].set(
         jax.random.uniform(jax.random.PRNGKey(0), GRID, jnp.float32)
         .astype(DTYPE))
-    npts = GRID[0] * GRID[1]
 
-    for name, version, kw in [
-        ("jacobi_ref", "ref", {}),
-        ("jacobi_v0_shifted", "v0", {}),
-        ("jacobi_v1_rowchunk", "v1", {}),
-        ("jacobi_v1_dbuf", "v1db", {}),
-        ("jacobi_v2_temporal_t8", "v2", {"t": 8}),
-    ]:
-        fn = jax.jit(lambda x, v=version, k=kw: ops.jacobi_step(
-            x, version=v, bm=64, interpret=True, **k))
+    for name, policy, kw, bpp in engine_variant_rows(spec, DTYPE, t=T):
+        if policy == "reference":
+            fn = jax.jit(ref.jacobi_step)
+        else:
+            fn = jax.jit(lambda x, p=policy, k=kw: engine.step(
+                x, spec, policy=p, bm=64, interpret=True, **k))
         t = time_fn(fn, u, warmup=1, iters=3)
         sweeps = kw.get("t", 1)
-        key = {"v2": "v2_t8"}.get(version, version)
-        gpts = model_jacobi_gpts(BYTES_PER_POINT[key])
+        gpts = model_jacobi_gpts(bpp)
         rows.append(row(name, t / sweeps * 1e6,
                         f"model_v5e_GPt/s={gpts:.2f}"))
     # paper reference points for the table

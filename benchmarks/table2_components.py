@@ -14,7 +14,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import make_laplace_problem
-from benchmarks.common import time_fn, row, model_jacobi_gpts, HBM_BW
+from benchmarks.common import time_fn, row, model_jacobi_gpts
 
 GRID = (512, 512)
 DTYPE = jnp.bfloat16
@@ -63,7 +63,6 @@ def compute_only(u, bm=64, interpret=True):
 def run():
     rows = []
     u = make_laplace_problem(*GRID, dtype=DTYPE)
-    npts = GRID[0] * GRID[1]
 
     t = time_fn(jax.jit(lambda x: dma_only(x)), u, warmup=1, iters=3)
     rows.append(row("dma_only", t * 1e6,
@@ -71,11 +70,20 @@ def run():
     t = time_fn(jax.jit(lambda x: compute_only(x)), u, warmup=1, iters=3)
     rows.append(row("compute_only", t * 1e6,
                     f"model_v5e_GPt/s={model_jacobi_gpts(0.02, 5.0):.2f}"))
-    from repro.kernels import ops
-    t = time_fn(jax.jit(lambda x: ops.jacobi_step(
-        x, version="v1", bm=64, interpret=True)), u, warmup=1, iters=3)
-    rows.append(row("full_v1", t * 1e6,
-                    f"model_v5e_GPt/s={model_jacobi_gpts(4.0, 5.0):.2f}"))
+    # Full pipelines: every non-fused policy from the engine registry (the
+    # fused temporal policy has no per-sweep component breakdown).
+    from repro import engine
+    from repro.core.stencil import jacobi_2d_5pt
+    spec = jacobi_2d_5pt()
+    db = jnp.dtype(DTYPE).itemsize
+    for p in engine.registry():
+        if p.fused:
+            continue
+        t = time_fn(jax.jit(lambda x, name=p.name: engine.step(
+            x, spec, policy=name, bm=64, interpret=True)), u, warmup=1, iters=3)
+        gpts = model_jacobi_gpts(p.bytes_per_point(spec, db, 1), 5.0)
+        rows.append(row(f"full_{p.name}", t * 1e6,
+                        f"model_v5e_GPt/s={gpts:.2f}"))
     # paper reference rows (GPt/s on one Tensix core)
     rows.append(row("paper_none", 0.0, "paper_GPt/s=7.574"))
     rows.append(row("paper_compute_only", 0.0, "paper_GPt/s=1.387"))

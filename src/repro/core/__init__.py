@@ -1,6 +1,7 @@
 """The paper's contribution as a composable library: stencil specs,
 Jacobi solvers, distributed halo exchange, SSM sequence parallelism."""
 from repro.core.stencil import (StencilSpec, jacobi_2d_5pt, laplace_2d_9pt,
+                                advection_1d_3pt, advection_2d_3pt,
                                 apply_stencil, make_laplace_problem)
 from repro.core.jacobi import jacobi_run, jacobi_solve, jacobi_run_temporal
 from repro.core.decomp import split_ringed, join_ringed

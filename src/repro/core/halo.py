@@ -24,7 +24,15 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.6: experimental location, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
 
 
 def _fwd_perm(n: int):

@@ -3,14 +3,19 @@
 The paper runs a fixed number of Jacobi iterations (5000/10000) over a 2-D
 grid. We provide:
 
-  * ``jacobi_run``      — fixed-iteration scan (paper-faithful), any backend
-                          ("ref" pure-jnp, or a Pallas kernel variant).
+  * ``jacobi_run``      — fixed-iteration scan (paper-faithful), any engine
+                          policy name (or a legacy step callable).
   * ``jacobi_solve``    — while_loop until residual < tol (convergence mode).
   * ``jacobi_run_temporal`` — temporal-blocked execution (beyond-paper): T
-                          iterations fused per grid round-trip.
+                          iterations fused per grid round-trip; leftover
+                          sweeps run under a non-fused registry policy.
 
-All drivers keep two logical arrays (u / unew) exactly like Listing 1 of the
-paper, expressed as a ``lax.scan`` carry swap so XLA double-buffers them.
+Drivers select kernels by *policy name* from the engine registry
+(``"reference"``, ``"shifted"``, ``"rowchunk"``, ``"dbuf"``, ``"temporal"``,
+``"auto"``). Passing a raw ``StepFn`` callable still works as a back-compat
+shim. All drivers keep two logical arrays (u / unew) exactly like Listing 1
+of the paper, expressed as a ``lax.scan`` carry swap so XLA double-buffers
+them.
 """
 from __future__ import annotations
 
@@ -25,15 +30,58 @@ from repro.core.stencil import StencilSpec, apply_stencil, jacobi_2d_5pt
 # A step function maps grid -> grid (one Jacobi sweep, ring fixed).
 StepFn = Callable[[jax.Array], jax.Array]
 
+#: Policy name for the pure-jnp oracle (not a Pallas kernel, so it lives in
+#: the drivers rather than the engine registry).
+REFERENCE = "reference"
+
 
 def reference_step(spec: StencilSpec | None = None) -> StepFn:
     spec = spec or jacobi_2d_5pt()
     return functools.partial(apply_stencil, spec=spec)
 
 
-def jacobi_run(u0: jax.Array, iters: int, step: StepFn | None = None) -> jax.Array:
+def _resolve_step(step: StepFn | str | None, policy: str | None,
+                  spec: StencilSpec | None, **engine_kw) -> StepFn:
+    """Turn (step, policy) into a StepFn.
+
+    ``step`` may be a legacy callable (used as-is), a policy-name string, or
+    None; ``policy`` is the preferred spelling for names. Giving both a
+    callable and a policy name is ambiguous and refused.
+    """
+    if callable(step):
+        if policy is not None:
+            raise ValueError("pass either a step callable or a policy name, "
+                             "not both")
+        return step
+    name = policy if policy is not None else step
+    if name is None:
+        return reference_step(spec)
+    if name == REFERENCE:
+        return reference_step(spec)
+    from repro import engine
+    if name != "auto" and engine.get_policy(name).fused:
+        # A fused policy advances t sweeps per call — as a per-sweep StepFn
+        # it would silently multiply the iteration count.
+        raise ValueError(
+            f"policy {name!r} is fused; use jacobi_run (which delegates to "
+            "engine.run), jacobi_run_temporal, or engine.run directly")
+    return functools.partial(engine.step, spec=spec, policy=name, **engine_kw)
+
+
+def jacobi_run(u0: jax.Array, iters: int, step: StepFn | str | None = None, *,
+               policy: str | None = None, spec: StencilSpec | None = None,
+               bm: int | None = None,
+               interpret: bool | None = None) -> jax.Array:
     """Run a fixed number of Jacobi sweeps (paper's termination criterion)."""
-    step = step or reference_step()
+    name = policy if policy is not None else (step if isinstance(step, str)
+                                              else None)
+    if name is not None and name != REFERENCE:
+        from repro import engine
+        if name == "auto" or engine.get_policy(name).fused:
+            # engine.run counts sweeps exactly (fused blocks + remainder).
+            return engine.run(u0, spec, policy=name, iters=iters, bm=bm,
+                              interpret=interpret)
+    step = _resolve_step(step, policy, spec, bm=bm, interpret=interpret)
 
     def body(u, _):
         return step(u), None
@@ -42,10 +90,12 @@ def jacobi_run(u0: jax.Array, iters: int, step: StepFn | None = None) -> jax.Arr
     return u
 
 
-def jacobi_run_unrolled(u0: jax.Array, iters: int, step: StepFn | None = None,
-                        unroll: int = 4) -> jax.Array:
+def jacobi_run_unrolled(u0: jax.Array, iters: int,
+                        step: StepFn | str | None = None, unroll: int = 4, *,
+                        policy: str | None = None,
+                        spec: StencilSpec | None = None) -> jax.Array:
     """Fixed-iteration run with scan unrolling (compile-time perf knob)."""
-    step = step or reference_step()
+    step = _resolve_step(step, policy, spec)
 
     def body(u, _):
         return step(u), None
@@ -59,8 +109,12 @@ def jacobi_solve(
     tol: float = 1e-5,
     max_iters: int = 100_000,
     check_every: int = 50,
-    step: StepFn | None = None,
+    step: StepFn | str | None = None,
     spec: StencilSpec | None = None,
+    *,
+    policy: str | None = None,
+    bm: int | None = None,
+    interpret: bool | None = None,
 ):
     """Iterate until the max-norm update is below ``tol``.
 
@@ -70,7 +124,7 @@ def jacobi_solve(
     Returns (u, iters_done, final_residual).
     """
     spec = spec or jacobi_2d_5pt()
-    step = step or reference_step(spec)
+    step = _resolve_step(step, policy, spec, bm=bm, interpret=interpret)
     r = spec.radius
     inner_idx = tuple(slice(r, s - r) for s in u0.shape)
 
@@ -96,19 +150,43 @@ def jacobi_solve(
     return u, iters, res
 
 
-def jacobi_run_temporal(u0: jax.Array, iters: int, tstep: StepFn, t: int) -> jax.Array:
+def jacobi_run_temporal(u0: jax.Array, iters: int, tstep: StepFn | None = None,
+                        t: int = 8, *, spec: StencilSpec | None = None,
+                        bm: int | None = None, interpret: bool | None = None,
+                        remainder_policy: str | None = None) -> jax.Array:
     """Run ``iters`` sweeps using a fused T-step kernel.
 
-    ``tstep`` must advance the grid by exactly ``t`` Jacobi sweeps per call
-    (e.g. the temporal-blocked Pallas kernel). ``iters`` must be divisible by
-    ``t``; the remainder is refused loudly rather than silently computed with
-    a different operator.
+    ``iters // t`` fused blocks advance the grid ``t`` sweeps per HBM
+    round-trip; the leftover ``iters % t`` sweeps run one-at-a-time under
+    ``remainder_policy`` (a non-fused policy from the engine registry,
+    default :data:`repro.engine.dispatch.DEFAULT_REMAINDER_POLICY`) so any
+    iteration count is valid.
+
+    ``tstep`` (legacy) must advance the grid by exactly ``t`` sweeps per
+    call; when omitted, the engine's temporal policy is used.
     """
-    if iters % t != 0:
-        raise ValueError(f"iters={iters} not divisible by temporal block t={t}")
+    from repro import engine
+    from repro.engine.dispatch import DEFAULT_REMAINDER_POLICY
+
+    spec = spec or jacobi_2d_5pt()
+    remainder_policy = remainder_policy or DEFAULT_REMAINDER_POLICY
+
+    if tstep is None:
+        # Pure engine path: fused blocks + remainder handled by engine.run.
+        return engine.run(u0, spec, policy="temporal", iters=iters, t=t,
+                          bm=bm, interpret=interpret,
+                          remainder_policy=remainder_policy)
+
+    # Legacy path: caller supplied the fused t-step callable.
+    nfull, rem = divmod(iters, t)
 
     def body(u, _):
         return tstep(u), None
 
-    u, _ = jax.lax.scan(body, u0, None, length=iters // t)
+    u = u0
+    if nfull:
+        u, _ = jax.lax.scan(body, u, None, length=nfull)
+    if rem:
+        u = jacobi_run(u, rem, policy=remainder_policy, spec=spec, bm=bm,
+                       interpret=interpret)
     return u

@@ -76,6 +76,18 @@ def advection_1d_3pt(c: float = 0.2) -> StencilSpec:
                        weights=(0.5 * c + 0.25, 0.5, 0.25 - 0.5 * c))
 
 
+def advection_2d_3pt(c: float = 0.2) -> StencilSpec:
+    """The 1-D advection stencil embedded as a 2-D row stencil.
+
+    Rows are independent transport lines; this is how 1-D workloads run on
+    the 2-D engine (every engine policy then applies, including the
+    double-buffered and temporal-blocked data movers).
+    """
+    base = advection_1d_3pt(c)
+    return StencilSpec(offsets=tuple((0, o[0]) for o in base.offsets),
+                       weights=base.weights)
+
+
 def interior(u: jax.Array, r: int) -> jax.Array:
     """View of the interior (non-boundary) region of a ringed grid."""
     idx = tuple(slice(r, s - r) for s in u.shape)

@@ -1,0 +1,45 @@
+"""Spec-driven stencil execution engine.
+
+One subsystem replaces the per-kernel zoo: any 2-D
+:class:`~repro.core.stencil.StencilSpec` (any radius, any tap set) runs
+under any of the paper's execution policies —
+
+    ``shifted``  (§IV initial)  ·  ``rowchunk`` (§VI optimized)
+    ``dbuf``     (Table I double buffering)  ·  ``temporal`` (beyond paper)
+
+Typical use::
+
+    from repro import engine
+    from repro.core.stencil import laplace_2d_9pt
+
+    u1 = engine.run(u, laplace_2d_9pt(), policy="auto", iters=100)
+
+Layers: ``plan`` (block/VMEM/temporal-depth planning, cached),
+``policies`` (the Pallas kernels), ``dispatch`` (registry + run/step).
+"""
+from repro.engine.plan import (  # noqa: F401
+    DEFAULT_BM,
+    DEFAULT_T,
+    ExecutionPlan,
+    PlanError,
+    pick_bm,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_for,
+)
+from repro.engine.policies import (  # noqa: F401
+    stencil_dbuf,
+    stencil_rowchunk,
+    stencil_shifted,
+    stencil_temporal,
+)
+from repro.engine.dispatch import (  # noqa: F401
+    Policy,
+    available_policies,
+    get_policy,
+    register_policy,
+    registry,
+    resolve_auto,
+    run,
+    step,
+)

@@ -1,0 +1,194 @@
+"""Variant registry and dispatch for the stencil engine.
+
+Every execution policy registers itself here with enough metadata for the
+benchmark tables to enumerate variants (name, paper provenance, modeled
+bytes/point) — no caller keeps a hand-written kernel list. ``run`` is the
+public entry point: pick a policy (or ``"auto"``), advance any 2-D
+``StencilSpec`` any number of sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+
+from repro.core.stencil import StencilSpec, jacobi_2d_5pt
+from repro.engine import policies as P
+from repro.engine.plan import DEFAULT_T, PlanError, plan_for
+
+#: Non-fused policy used for the leftover sweeps when ``iters`` is not a
+#: multiple of the temporal depth.
+DEFAULT_REMAINDER_POLICY = "rowchunk"
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A registered execution policy.
+
+    fn(u, spec, *, bm=None, interpret=False[, t=None]) advances the grid by
+    one sweep (``fused=False``) or by ``t`` sweeps (``fused=True``).
+    ``bytes_per_point(spec, dtype_bytes, t)`` is the HBM traffic model per
+    interior point per sweep used by the roofline-derived benchmark columns.
+    """
+
+    name: str
+    fn: Callable
+    description: str
+    paper_ref: str
+    fused: bool
+    bytes_per_point: Callable[[StencilSpec, int, int], float]
+
+
+_REGISTRY: dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy) -> Policy:
+    if policy.name in _REGISTRY:
+        raise ValueError(f"policy {policy.name!r} already registered")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered: {available_policies()}"
+        ) from None
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def registry() -> tuple[Policy, ...]:
+    """All registered policies, in registration (paper-arc) order."""
+    return tuple(_REGISTRY.values())
+
+
+register_policy(Policy(
+    name="shifted",
+    fn=P.stencil_shifted,
+    description="one materialized shifted HBM copy per tap",
+    paper_ref="§IV initial design (Table I 'initial')",
+    fused=False,
+    # taps operand reads + the source read XLA does to build the shifts + 1 write
+    bytes_per_point=lambda spec, db, t: db * (spec.taps + 2),
+))
+register_policy(Policy(
+    name="rowchunk",
+    fn=P.stencil_rowchunk,
+    description="contiguous row-chunk DMA + in-VMEM tap views",
+    paper_ref="§VI optimized design (Table I 'write optimised')",
+    fused=False,
+    bytes_per_point=lambda spec, db, t: db * 2,  # 1 read + 1 write, halo amortized
+))
+register_policy(Policy(
+    name="dbuf",
+    fn=P.stencil_dbuf,
+    description="rowchunk with double-buffered prefetching data mover",
+    paper_ref="Table I 'double buffering'",
+    fused=False,
+    bytes_per_point=lambda spec, db, t: db * 2,
+))
+register_policy(Policy(
+    name="temporal",
+    fn=P.stencil_temporal,
+    description="T sweeps fused per HBM round-trip (T*r-deep halos)",
+    paper_ref="beyond paper (§VII communication-avoiding direction)",
+    fused=True,
+    bytes_per_point=lambda spec, db, t: db * 2 / max(t, 1),
+))
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_auto(shape, dtype, spec: StencilSpec, *, iters: int = 1,
+                 t: int | None = None) -> str:
+    """Pick a policy from a simple VMEM/traffic heuristic.
+
+    Temporal blocking wins whenever several sweeps can amortize one HBM
+    round-trip and its (t*r)-deep halo window passes plan validation; with a
+    multi-block grid the double-buffered mover hides DMA latency; a single
+    resident block leaves nothing to prefetch, so plain rowchunk.
+    """
+    t_eff = t if t is not None else min(DEFAULT_T, max(iters, 1))
+    if iters >= 2 and t_eff >= 2:
+        try:
+            plan_for(shape, dtype, spec, "temporal", t=min(t_eff, iters))
+            return "temporal"
+        except PlanError:
+            pass
+    try:
+        plan = plan_for(shape, dtype, spec, "rowchunk")
+    except PlanError:
+        return "shifted"  # window never fits; stream per-tap blocks instead
+    return "dbuf" if plan.nblocks >= 2 else "rowchunk"
+
+
+def step(u: jax.Array, spec: StencilSpec | None = None, *,
+         policy: str = "auto", bm: int | None = None, t: int | None = None,
+         interpret: bool | None = None) -> jax.Array:
+    """One kernel invocation: a single sweep, or ``t`` fused sweeps for the
+    temporal policy."""
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if policy == "auto":
+        # A single step must advance exactly one sweep, so auto never picks
+        # a fused policy here (run() with iters does).
+        policy = resolve_auto(u.shape, u.dtype, spec, iters=1, t=1)
+    p = get_policy(policy)
+    if p.fused:
+        return p.fn(u, spec, bm=bm, t=t, interpret=interpret)
+    return p.fn(u, spec, bm=bm, interpret=interpret)
+
+
+def _scan_steps(u: jax.Array, fn: Callable, n: int) -> jax.Array:
+    if n <= 0:
+        return u
+    def body(v, _):
+        return fn(v), None
+    v, _ = jax.lax.scan(body, u, None, length=n)
+    return v
+
+
+def run(u: jax.Array, spec: StencilSpec | None = None, *,
+        policy: str = "auto", iters: int = 1, bm: int | None = None,
+        t: int | None = None, interpret: bool | None = None,
+        remainder_policy: str = DEFAULT_REMAINDER_POLICY) -> jax.Array:
+    """Advance a ringed grid by exactly ``iters`` sweeps of ``spec``.
+
+    ``policy`` is a registry name or ``"auto"``. For the temporal policy,
+    full ``t``-deep fused blocks cover ``iters // t`` round-trips and the
+    leftover ``iters % t`` sweeps run under ``remainder_policy`` (a
+    non-fused registry policy), so any iteration count is valid.
+    """
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if policy == "auto":
+        policy = resolve_auto(u.shape, u.dtype, spec, iters=iters, t=t)
+    p = get_policy(policy)
+
+    if p.fused:
+        t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
+        nfull, rem = divmod(iters, t_eff)
+        u = _scan_steps(u, functools.partial(
+            p.fn, spec=spec, bm=bm, t=t_eff, interpret=interpret), nfull)
+        if rem:
+            rp = get_policy(remainder_policy)
+            if rp.fused:
+                raise ValueError(
+                    f"remainder_policy {remainder_policy!r} must be non-fused")
+            u = _scan_steps(u, functools.partial(
+                rp.fn, spec=spec, bm=bm, interpret=interpret), rem)
+        return u
+
+    return _scan_steps(u, functools.partial(
+        p.fn, spec=spec, bm=bm, interpret=interpret), iters)

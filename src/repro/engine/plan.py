@@ -1,0 +1,163 @@
+"""Execution planning for the stencil engine.
+
+A *plan* is everything that must be decided before a policy kernel can be
+launched: the row-block size ``bm`` (the grid granularity), the VMEM window
+that block implies, the temporal fusion depth, and whether the whole thing
+fits the per-core VMEM budget. Plans are pure functions of static arguments
+(shape, dtype, spec, policy, requested knobs), so they are memoized in an
+in-process cache — re-dispatching the same problem costs a dict lookup, not
+a re-derivation (and, because the policy wrappers are jitted on the same
+static keys, not a retrace either).
+
+``pick_bm`` lives here as the single shared copy; it used to be duplicated
+verbatim in ``kernels/jacobi.py`` and ``kernels/stencil_general.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+from repro.core.stencil import StencilSpec
+
+# Knob defaults shared by every policy.
+DEFAULT_BM = 256   # interior rows per block
+DEFAULT_T = 8      # temporal fusion depth (sweeps per HBM round-trip)
+
+# Per-core fast-memory budget the planner validates against. 16 MB is the
+# TPU VMEM size; the Grayskull Tensix SRAM (1.5 MB) would use the same
+# machinery with a smaller constant.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+class PlanError(ValueError):
+    """A (shape, dtype, spec, policy) combination that cannot be planned."""
+
+
+def pick_bm(h_int: int, bm: int) -> int:
+    """Largest divisor of ``h_int`` that is <= ``bm`` (keeps the grid exact)."""
+    bm = min(bm, h_int)
+    while h_int % bm:
+        bm -= 1
+    return bm
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Fully-resolved launch parameters for one policy on one problem.
+
+    shape/dtype describe the ringed grid (boundary included); ``bm`` is the
+    number of interior rows each grid step produces; ``window_rows`` is the
+    height of the VMEM-resident input window that block needs (bm + halo);
+    ``t`` is the number of sweeps fused per HBM round-trip (1 unless the
+    policy is temporal).
+    """
+
+    policy: str
+    shape: tuple[int, int]
+    dtype: str
+    spec: StencilSpec
+    bm: int
+    t: int
+    window_rows: int
+    vmem_bytes: int
+
+    @property
+    def radius(self) -> int:
+        return self.spec.radius
+
+    @property
+    def interior_shape(self) -> tuple[int, int]:
+        r = self.spec.radius
+        return (self.shape[0] - 2 * r, self.shape[1] - 2 * r)
+
+    @property
+    def nblocks(self) -> int:
+        return self.interior_shape[0] // self.bm
+
+    @property
+    def dtype_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    def describe(self) -> str:
+        return (f"{self.policy}: grid={self.shape} dtype={self.dtype} "
+                f"taps={self.spec.taps} r={self.radius} bm={self.bm} "
+                f"t={self.t} window={self.window_rows}x{self.shape[1]} "
+                f"vmem={self.vmem_bytes / 1024:.0f}KiB blocks={self.nblocks}")
+
+
+def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
+                     bm: int, t: int) -> tuple[int, int]:
+    """VMEM window height and total scratch/operand footprint estimate."""
+    h, w = shape
+    r = spec.radius
+    wi = w - 2 * r
+    if policy == "shifted":
+        # One streamed (bm, wi) block per tap plus the output block; the
+        # Pallas pipeline double-buffers them (x2).
+        win = bm
+        vmem = 2 * (spec.taps + 1) * bm * wi * dtype_bytes
+    elif policy == "rowchunk":
+        win = min(bm + 2 * r, h)
+        vmem = win * w * dtype_bytes + 2 * bm * wi * dtype_bytes
+    elif policy == "dbuf":
+        win = min(bm + 2 * r, h)
+        vmem = 2 * win * w * dtype_bytes + 2 * bm * wi * dtype_bytes
+    elif policy == "temporal":
+        win = min(bm + 2 * t * r, h)
+        # The t in-flight sweeps run on an f32 copy of the window (4B/elt,
+        # two live buffers under fori_loop), plus the stored window and the
+        # write-back staging block.
+        vmem = win * w * (dtype_bytes + 8) + bm * w * dtype_bytes
+    else:
+        raise PlanError(f"unknown policy {policy!r}")
+    return win, vmem
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
+                 policy: str, bm_req: int, t: int) -> ExecutionPlan:
+    h, w = shape
+    r = spec.radius
+    if spec.ndim != 2:
+        raise PlanError(f"engine policies are 2-D; spec has ndim={spec.ndim} "
+                        "(embed 1-D stencils as 2-D row stencils)")
+    if h <= 2 * r or w <= 2 * r:
+        raise PlanError(f"grid {shape} too small for stencil radius {r}")
+    if t < 1:
+        raise PlanError(f"temporal depth t={t} must be >= 1")
+    hi = h - 2 * r
+    bm = pick_bm(hi, bm_req)
+    win, vmem = _window_and_vmem(policy, shape, jnp.dtype(dtype).itemsize,
+                                 spec, bm, t)
+    if vmem > VMEM_BUDGET_BYTES:
+        raise PlanError(
+            f"policy {policy!r} needs ~{vmem / 2**20:.1f} MiB of VMEM for "
+            f"grid {shape} (bm={bm}, t={t}); budget is "
+            f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB — lower bm or t")
+    return ExecutionPlan(policy=policy, shape=shape, dtype=dtype, spec=spec,
+                         bm=bm, t=t, window_rows=win, vmem_bytes=vmem)
+
+
+def plan_for(shape, dtype, spec: StencilSpec, policy: str, *,
+             bm: int | None = None, t: int | None = None) -> ExecutionPlan:
+    """Resolve (and cache) an :class:`ExecutionPlan` for static arguments.
+
+    ``bm``/``t`` are requests; the plan holds the realized values (``bm`` is
+    snapped to the largest interior-row divisor, ``t`` is forced to 1 for
+    non-temporal policies).
+    """
+    t_eff = (t if t is not None else DEFAULT_T) if policy == "temporal" else 1
+    return _plan_cached(tuple(int(s) for s in shape), jnp.dtype(dtype).name,
+                        spec, policy, int(bm if bm is not None else DEFAULT_BM),
+                        int(t_eff))
+
+
+def plan_cache_info():
+    """lru_cache statistics for the plan cache (hits/misses/currsize)."""
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()

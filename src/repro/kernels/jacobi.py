@@ -1,270 +1,65 @@
-"""Pallas TPU kernels for the 2-D 5-point Jacobi sweep.
+"""DEPRECATED — thin wrappers over the spec-driven stencil engine.
 
-Three generations, mirroring the paper's §IV → §VI → future-work arc:
+The four hand-written 5-point Jacobi kernel generations that used to live
+here (v0 shifted copies, v1 row-chunk, v1db double-buffered, v2 temporal)
+are now the four *policies* of ``repro.engine``, generalized to arbitrary
+2-D ``StencilSpec``s. These wrappers keep the historical entry points alive
+for one deprecation cycle:
 
-  v0  ``jacobi_v0_shifted``   — the paper's *initial* design (§IV): four
-      pre-shifted neighbour copies are materialized in HBM and streamed in as
-      four separate operands ("four CBs packed from a local buffer"). Memory
-      traffic ≈ 5× the domain per sweep. Kept as the faithful baseline.
+    jacobi_v0_shifted   -> engine.stencil_shifted(u, jacobi_2d_5pt())
+    jacobi_v1_rowchunk  -> engine.stencil_rowchunk(u, jacobi_2d_5pt())
+    jacobi_v1_dbuf      -> engine.stencil_dbuf(u, jacobi_2d_5pt())
+    jacobi_v2_temporal  -> engine.stencil_temporal(u, jacobi_2d_5pt())
 
-  v1  ``jacobi_v1_rowchunk``  — the paper's *optimized* design (§VI): one
-      contiguous full-width row-chunk (+1 halo row each side) is DMA'd from
-      HBM into a VMEM scratch window per grid step; the ±1-X offsets are
-      served by in-VMEM shifts of the same buffer (the paper's CB
-      read-pointer aliasing) and ±1-Y by the halo rows already resident.
-      Memory traffic ≈ 1× + 2 halo rows per block.
-
-  v1db ``jacobi_v1_dbuf``     — v1 with an explicitly double-buffered data
-      mover: a single kernel instance loops over row blocks, prefetching
-      block i+1 into the alternate VMEM slot while computing block i
-      (the paper's Table I "double buffering" row, done TPU-style).
-
-  v2  ``jacobi_v2_temporal``  — beyond-paper: T sweeps fused per HBM
-      round-trip. Each block DMAs a window with T halo rows per side,
-      advances it T steps locally (valid region shrinking by one row per
-      step), and writes back the central rows. HBM traffic per sweep drops
-      ~T× at the cost of O(T²) redundant halo compute — the right trade on
-      TPU where the compute:bandwidth ratio (197e12/819e9 ≈ 240 flop/byte)
-      dwarfs the stencil's ~5/4 flop/byte intensity.
-
-All grids are "ringed": shape (H, W) with a fixed Dirichlet boundary ring of
-width 1; only the (H-2, W-2) interior is updated. Kernels compute in f32 and
-store in the input dtype (bf16 in the paper-faithful configuration).
+New code should call ``engine.run`` / ``engine.step`` with a policy name,
+or the ``engine.stencil_*`` functions directly with an explicit spec.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-_DEF_BM = 256  # default interior rows per block
+from repro.core.stencil import jacobi_2d_5pt
+from repro import engine
 
-
-def _pick_bm(h_int: int, bm: int) -> int:
-    """Largest divisor of h_int that is <= bm (keeps the grid exact)."""
-    bm = min(bm, h_int)
-    while h_int % bm:
-        bm -= 1
-    return bm
+_DEF_BM = engine.DEFAULT_BM  # historical name, kept for importers
 
 
-# ---------------------------------------------------------------------------
-# v0 — shifted-copies baseline (paper §IV)
-# ---------------------------------------------------------------------------
-
-def _v0_kernel(up_ref, down_ref, left_ref, right_ref, o_ref):
-    acc = (up_ref[...].astype(jnp.float32) + down_ref[...].astype(jnp.float32)
-           + left_ref[...].astype(jnp.float32) + right_ref[...].astype(jnp.float32))
-    o_ref[...] = (acc * 0.25).astype(o_ref.dtype)
+def _warn(old: str, policy: str) -> None:
+    warnings.warn(
+        f"repro.kernels.jacobi.{old} is deprecated; use "
+        f"repro.engine.run(u, spec, policy={policy!r}) or "
+        f"repro.engine.stencil_{policy}(u, spec)",
+        DeprecationWarning, stacklevel=3)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def jacobi_v0_shifted(u: jax.Array, *, bm: int = _DEF_BM,
                       interpret: bool = False) -> jax.Array:
-    """One sweep via four materialized shifted copies (faithful baseline)."""
-    h, w = u.shape
-    hi, wi = h - 2, w - 2
-    bm = _pick_bm(hi, bm)
-    # The four shifted neighbour views. XLA materializes these as separate
-    # HBM buffers feeding the kernel — deliberately reproducing the paper's
-    # replicated-read traffic.
-    up = u[0:-2, 1:-1]
-    down = u[2:, 1:-1]
-    left = u[1:-1, 0:-2]
-    right = u[1:-1, 2:]
-    spec = pl.BlockSpec((bm, wi), lambda i: (i, 0))
-    out = pl.pallas_call(
-        _v0_kernel,
-        grid=(hi // bm,),
-        in_specs=[spec] * 4,
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((hi, wi), u.dtype),
-        interpret=interpret,
-    )(up, down, left, right)
-    return u.at[1:-1, 1:-1].set(out)
+    """One sweep via four materialized shifted copies (paper §IV)."""
+    _warn("jacobi_v0_shifted", "shifted")
+    return engine.stencil_shifted(u, jacobi_2d_5pt(), bm=bm,
+                                  interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# v1 — row-chunk single-load (paper §VI)
-# ---------------------------------------------------------------------------
-
-def _v1_kernel(u_hbm, o_ref, scratch, sem, *, bm: int):
-    i = pl.program_id(0)
-    # Data-mover: one contiguous DMA of (bm + 2) full-width rows.
-    cp = pltpu.make_async_copy(u_hbm.at[pl.ds(i * bm, bm + 2), :], scratch, sem)
-    cp.start()
-    cp.wait()
-    c = scratch[...].astype(jnp.float32)
-    # CB read-pointer aliasing, TPU-style: four shifted in-VMEM views of the
-    # single resident window. No extra HBM traffic.
-    up = c[0:-2, 1:-1]
-    down = c[2:, 1:-1]
-    left = c[1:-1, 0:-2]
-    right = c[1:-1, 2:]
-    o_ref[...] = ((up + down + left + right) * 0.25).astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def jacobi_v1_rowchunk(u: jax.Array, *, bm: int = _DEF_BM,
                        interpret: bool = False) -> jax.Array:
-    """One sweep via contiguous row-chunk loads + in-VMEM shifts."""
-    h, w = u.shape
-    hi, wi = h - 2, w - 2
-    bm = _pick_bm(hi, bm)
-    out = pl.pallas_call(
-        functools.partial(_v1_kernel, bm=bm),
-        grid=(hi // bm,),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec((bm, wi), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((hi, wi), u.dtype),
-        scratch_shapes=[pltpu.VMEM((bm + 2, w), u.dtype), pltpu.SemaphoreType.DMA],
-        interpret=interpret,
-    )(u)
-    return u.at[1:-1, 1:-1].set(out)
+    """One sweep via contiguous row-chunk loads + in-VMEM shifts (§VI)."""
+    _warn("jacobi_v1_rowchunk", "rowchunk")
+    return engine.stencil_rowchunk(u, jacobi_2d_5pt(), bm=bm,
+                                   interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# v1db — v1 with an explicit double-buffered data mover
-# ---------------------------------------------------------------------------
-
-def _v1db_kernel(u_hbm, o_hbm, in_scr, out_scr, in_sem, out_sem,
-                 *, bm: int, nblocks: int, w: int):
-    def in_copy(slot, blk):
-        return pltpu.make_async_copy(
-            u_hbm.at[pl.ds(blk * bm, bm + 2), :], in_scr.at[slot], in_sem.at[slot])
-
-    in_copy(0, 0).start()
-
-    def body(blk, _):
-        slot = jax.lax.rem(blk, 2)
-        nxt = jax.lax.rem(blk + 1, 2)
-
-        @pl.when(blk + 1 < nblocks)
-        def _():
-            # Prefetch the next row-chunk while this one computes.
-            in_copy(nxt, blk + 1).start()
-
-        in_copy(slot, blk).wait()
-        c = in_scr[slot].astype(jnp.float32)
-        up = c[0:-2, 1:-1]
-        down = c[2:, 1:-1]
-        left = c[1:-1, 0:-2]
-        right = c[1:-1, 2:]
-        res = ((up + down + left + right) * 0.25).astype(out_scr.dtype)
-
-        @pl.when(blk > 1)
-        def _():
-            # This slot's previous write was issued at blk-2; drain it
-            # before overwriting the buffer.
-            pltpu.make_async_copy(
-                out_scr.at[slot], o_hbm.at[pl.ds((blk - 2) * bm, bm), :],
-                out_sem.at[slot]).wait()
-
-        out_scr[slot] = res
-        pltpu.make_async_copy(
-            out_scr.at[slot], o_hbm.at[pl.ds(blk * bm, bm), :],
-            out_sem.at[slot]).start()
-        return 0
-
-    jax.lax.fori_loop(0, nblocks, body, 0)
-    # Drain the (up to two) writes still in flight.
-    for blk in range(max(0, nblocks - 2), nblocks):
-        slot = blk % 2
-        pltpu.make_async_copy(
-            out_scr.at[slot], o_hbm.at[pl.ds(blk * bm, bm), :],
-            out_sem.at[slot]).wait()
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def jacobi_v1_dbuf(u: jax.Array, *, bm: int = _DEF_BM,
                    interpret: bool = False) -> jax.Array:
-    """One sweep with an explicit double-buffered load/compute/store loop."""
-    h, w = u.shape
-    hi, wi = h - 2, w - 2
-    bm = _pick_bm(hi, bm)
-    nblocks = hi // bm
-    out = pl.pallas_call(
-        functools.partial(_v1db_kernel, bm=bm, nblocks=nblocks, w=w),
-        grid=(),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((hi, wi), u.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((2, bm + 2, w), u.dtype),
-            pltpu.VMEM((2, bm, wi), u.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
-        interpret=interpret,
-    )(u)
-    return u.at[1:-1, 1:-1].set(out)
+    """One sweep with a double-buffered load/compute/store loop (Table I)."""
+    _warn("jacobi_v1_dbuf", "dbuf")
+    return engine.stencil_dbuf(u, jacobi_2d_5pt(), bm=bm, interpret=interpret)
 
 
-# ---------------------------------------------------------------------------
-# v2 — temporal blocking (beyond paper)
-# ---------------------------------------------------------------------------
-
-def _v2_kernel(u_hbm, o_hbm, scratch, out_scr, in_sem, out_sem,
-               *, bm: int, t: int, h: int, w: int):
-    i = pl.program_id(0)
-    win = min(bm + 2 * t, h)  # loaded rows (whole grid if the halo overflows)
-    # Clamp the window inside the array; remember where it starts globally.
-    ws = jnp.clip(i * bm + 1 - t, 0, h - win)
-    cp = pltpu.make_async_copy(u_hbm.at[pl.ds(ws, win), :], scratch, in_sem)
-    cp.start()
-    cp.wait()
-
-    c0 = scratch[...].astype(jnp.float32)
-    # Masks pinning global Dirichlet cells (row 0, row h-1, col 0, col w-1).
-    grow = ws + jax.lax.broadcasted_iota(jnp.int32, (win, w), 0)
-    fixed = (grow == 0) | (grow == h - 1)
-    fixed = fixed | (jax.lax.broadcasted_iota(jnp.int32, (win, w), 1) == 0)
-    fixed = fixed | (jax.lax.broadcasted_iota(jnp.int32, (win, w), 1) == w - 1)
-
-    def sweep(_, c):
-        up = jnp.roll(c, 1, axis=0)
-        down = jnp.roll(c, -1, axis=0)
-        left = jnp.roll(c, 1, axis=1)
-        right = jnp.roll(c, -1, axis=1)
-        new = (up + down + left + right) * 0.25
-        # Dirichlet cells keep their original value; roll wrap garbage only
-        # ever lands in the t-deep halo that is discarded below.
-        return jnp.where(fixed, c0, new)
-
-    c = jax.lax.fori_loop(0, t, sweep, c0)
-    # Central bm rows are exact after t sweeps; write them back.
-    lo = i * bm + 1 - ws  # local offset of the first output row
-    out_scr[...] = jax.lax.dynamic_slice(c, (lo, 0), (bm, w)).astype(out_scr.dtype)
-    wcp = pltpu.make_async_copy(out_scr, o_hbm.at[pl.ds(i * bm + 1, bm), :], out_sem)
-    wcp.start()
-    wcp.wait()
-
-
-@functools.partial(jax.jit, static_argnames=("t", "bm", "interpret"))
 def jacobi_v2_temporal(u: jax.Array, *, t: int = 8, bm: int = _DEF_BM,
                        interpret: bool = False) -> jax.Array:
-    """Advance the grid by exactly ``t`` Jacobi sweeps in one HBM round-trip."""
-    h, w = u.shape
-    hi = h - 2
-    bm = _pick_bm(hi, bm)
-    win = min(bm + 2 * t, h)
-    out = pl.pallas_call(
-        functools.partial(_v2_kernel, bm=bm, t=t, h=h, w=w),
-        grid=(hi // bm,),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((h, w), u.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((win, w), u.dtype),
-            pltpu.VMEM((bm, w), u.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
-        interpret=interpret,
-    )(u)
-    # Boundary rows are never written by the kernel; restore them.
-    out = out.at[0, :].set(u[0, :]).at[-1, :].set(u[-1, :])
-    return out
+    """Advance the grid by exactly ``t`` Jacobi sweeps in one round-trip."""
+    _warn("jacobi_v2_temporal", "temporal")
+    return engine.stencil_temporal(u, jacobi_2d_5pt(), t=t, bm=bm,
+                                   interpret=interpret)

@@ -11,11 +11,20 @@ import functools
 
 import jax
 
+from repro import engine
 from repro.kernels import ref as _ref
-from repro.kernels import jacobi as _jacobi
 from repro.kernels import conv1d as _conv1d
 
 VERSIONS = ("ref", "v0", "v1", "v1db", "v2")
+
+# Historical version tags -> engine policy names (the engine registry is
+# the source of truth; these aliases exist for paper-facing CLIs/tests).
+VERSION_TO_POLICY = {
+    "v0": "shifted",
+    "v1": "rowchunk",
+    "v1db": "dbuf",
+    "v2": "temporal",
+}
 
 
 def _on_tpu() -> bool:
@@ -25,19 +34,13 @@ def _on_tpu() -> bool:
 def jacobi_step(u: jax.Array, *, version: str = "v1", bm: int = 256,
                 t: int = 8, interpret: bool | None = None) -> jax.Array:
     """One (or, for v2, ``t``) Jacobi sweep(s) with the selected kernel."""
-    if interpret is None:
-        interpret = not _on_tpu()
     if version == "ref":
         return _ref.jacobi_step(u)
-    if version == "v0":
-        return _jacobi.jacobi_v0_shifted(u, bm=bm, interpret=interpret)
-    if version == "v1":
-        return _jacobi.jacobi_v1_rowchunk(u, bm=bm, interpret=interpret)
-    if version == "v1db":
-        return _jacobi.jacobi_v1_dbuf(u, bm=bm, interpret=interpret)
-    if version == "v2":
-        return _jacobi.jacobi_v2_temporal(u, t=t, bm=bm, interpret=interpret)
-    raise ValueError(f"unknown jacobi kernel version {version!r}; one of {VERSIONS}")
+    if version not in VERSION_TO_POLICY:
+        raise ValueError(
+            f"unknown jacobi kernel version {version!r}; one of {VERSIONS}")
+    return engine.step(u, policy=VERSION_TO_POLICY[version], bm=bm, t=t,
+                       interpret=interpret)
 
 
 def make_step_fn(version: str = "v1", **kw):

@@ -1,68 +1,27 @@
-"""General weighted-stencil kernel (row-chunk design, any StencilSpec).
+"""DEPRECATED — thin wrapper over the spec-driven stencil engine.
 
-The paper's future work targets "more complex stencil algorithms, such as
-atmospheric advection". This kernel generalizes jacobi v1 to arbitrary
-tap offsets/weights within radius r: one contiguous (bm + 2r, W) DMA per
-block, every tap served by an in-VMEM shifted view (zero extra HBM reads,
-regardless of tap count — the whole point of the §VI design).
+``stencil_rowchunk`` (the general row-chunk kernel that used to live here)
+is now ``repro.engine.stencil_rowchunk`` — one of four policies the engine
+applies to any 2-D ``StencilSpec``. New code should use ``engine.run(u,
+spec, policy=...)`` and get the double-buffered / temporal-blocked data
+movers too.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import StencilSpec
+from repro import engine
 
 
-def _pick_bm(h_int: int, bm: int) -> int:
-    bm = min(bm, h_int)
-    while h_int % bm:
-        bm -= 1
-    return bm
-
-
-def _kernel(u_hbm, o_ref, scratch, sem, *, bm: int, r: int,
-            offsets, weights):
-    i = pl.program_id(0)
-    cp = pltpu.make_async_copy(u_hbm.at[pl.ds(i * bm, bm + 2 * r), :],
-                               scratch, sem)
-    cp.start()
-    cp.wait()
-    c = scratch[...].astype(jnp.float32)
-    w = scratch.shape[1]
-    acc = None
-    for (dy, dx), wt in zip(offsets, weights):
-        # tap view: rows [r+dy, r+dy+bm), cols [r+dx, w-r+dx)
-        tap = jax.lax.slice(c, (r + dy, r + dx), (r + dy + bm, w - r + dx))
-        term = tap * jnp.float32(wt)
-        acc = term if acc is None else acc + term
-    o_ref[...] = acc.astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("spec", "bm", "interpret"))
 def stencil_rowchunk(u: jax.Array, spec: StencilSpec, *, bm: int = 256,
                      interpret: bool = False) -> jax.Array:
     """One sweep of an arbitrary 2-D stencil; ring of width spec.radius
     held fixed (Dirichlet)."""
-    assert spec.ndim == 2, "2-D kernel"
-    r = spec.radius
-    h, w = u.shape
-    hi, wi = h - 2 * r, w - 2 * r
-    bm = _pick_bm(hi, bm)
-    out = pl.pallas_call(
-        functools.partial(_kernel, bm=bm, r=r, offsets=spec.offsets,
-                          weights=spec.weights),
-        grid=(hi // bm,),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec((bm, wi), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((hi, wi), u.dtype),
-        scratch_shapes=[pltpu.VMEM((bm + 2 * r, w), u.dtype),
-                        pltpu.SemaphoreType.DMA],
-        interpret=interpret,
-    )(u)
-    idx = tuple(slice(r, s - r) for s in u.shape)
-    return u.at[idx].set(out)
+    warnings.warn(
+        "repro.kernels.stencil_general.stencil_rowchunk is deprecated; use "
+        "repro.engine.stencil_rowchunk (or engine.run with a policy name)",
+        DeprecationWarning, stacklevel=2)
+    return engine.stencil_rowchunk(u, spec, bm=bm, interpret=interpret)

@@ -25,8 +25,12 @@ def main():
     ap.add_argument("--nx", type=int, default=512)
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--kernel", default="ref",
-                    choices=["ref", "v0", "v1", "v1db", "v2"])
-    ap.add_argument("--temporal", type=int, default=8, help="v2 fusion depth")
+                    choices=["ref", "v0", "v1", "v1db", "v2",
+                             "reference", "shifted", "rowchunk", "dbuf",
+                             "temporal", "auto"],
+                    help="engine policy name (legacy v* tags still accepted)")
+    ap.add_argument("--temporal", type=int, default=8,
+                    help="temporal-policy fusion depth")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--devices", type=int, default=1)
@@ -36,17 +40,20 @@ def main():
                     help="verify against the single-device reference")
     args = ap.parse_args()
 
+    from repro import engine
     from repro.core.stencil import make_laplace_problem
-    from repro.core.decomp import split_ringed
-    from repro.core import halo
-    from repro.core import jacobi as J
-    from repro.kernels import ops
+    from repro.kernels.ops import VERSION_TO_POLICY
 
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     u0 = make_laplace_problem(args.ny, args.nx, dtype=dtype,
                               left=1.0, right=0.0)
 
     if args.devices > 1:
+        # Deferred: halo pulls in shard_map, which single-device runs
+        # (and older jax wheels) don't need.
+        from repro.core.decomp import split_ringed
+        from repro.core import halo
+
         ndev = len(jax.devices())
         if ndev < args.devices:
             raise SystemExit(
@@ -66,13 +73,15 @@ def main():
         dt = time.perf_counter() - t0
         result = np.asarray(out)
     else:
-        if args.kernel == "v2":
-            stepfn = ops.make_step_fn("v2", t=args.temporal)
-            run = jax.jit(lambda u: J.jacobi_run_temporal(
-                u, args.iters, stepfn, t=args.temporal))
+        policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
+        if policy == "ref":
+            policy = "reference"
+        if policy == "reference":
+            from repro.core import jacobi as J
+            run = jax.jit(lambda u: J.jacobi_run(u, args.iters))
         else:
-            stepfn = ops.make_step_fn(args.kernel)
-            run = jax.jit(lambda u: J.jacobi_run(u, args.iters, stepfn))
+            run = jax.jit(lambda u: engine.run(
+                u, policy=policy, iters=args.iters, t=args.temporal))
         run(u0).block_until_ready()
         t0 = time.perf_counter()
         out = run(u0)

@@ -1,9 +1,12 @@
-"""Core stencil library: solver behaviour + hypothesis property tests."""
+"""Core stencil library: solver behaviour tests.
+
+(Hypothesis property tests live in test_property_stencil.py so this module
+collects even when hypothesis is not installed.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import stencil as S
 from repro.core import jacobi as J
@@ -61,8 +64,13 @@ def test_temporal_driver_matches_plain():
     tstep = ops.make_step_fn("v2", t=4, bm=16, interpret=True)
     fused = J.jacobi_run_temporal(u, 8, tstep, t=4)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(plain), rtol=1e-5, atol=1e-6)
-    with pytest.raises(ValueError):
-        J.jacobi_run_temporal(u, 7, tstep, t=4)
+    # Non-divisible iters: the 7 = 4 + 3 remainder sweeps run under a
+    # non-fused engine policy instead of raising (see test_engine.py for
+    # the full regression).
+    fused7 = J.jacobi_run_temporal(u, 7, tstep, t=4)
+    plain7 = J.jacobi_run(u, 7)
+    np.testing.assert_allclose(np.asarray(fused7), np.asarray(plain7),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_split_join_roundtrip():
@@ -71,59 +79,3 @@ def test_split_join_roundtrip():
     v = join_ringed(interior, bc)
     np.testing.assert_array_equal(np.asarray(v[1:-1, :]), np.asarray(u[1:-1, :]))
     np.testing.assert_array_equal(np.asarray(v[:, 1:-1]), np.asarray(u[:, 1:-1]))
-
-
-# ---------------------------------------------------------------------------
-# Property-based tests (hypothesis): invariants of the Jacobi operator
-# ---------------------------------------------------------------------------
-
-grids = st.tuples(st.integers(4, 24), st.integers(4, 24))
-
-
-@settings(max_examples=20, deadline=None)
-@given(shape=grids, seed=st.integers(0, 2**30))
-def test_property_max_principle(shape, seed):
-    """Jacobi sweep output is bounded by the input's min/max (averaging)."""
-    ny, nx = shape
-    key = jax.random.PRNGKey(seed)
-    u = jax.random.uniform(key, (ny + 2, nx + 2), minval=-3.0, maxval=5.0)
-    out = S.apply_stencil(u, S.jacobi_2d_5pt())
-    assert float(out.max()) <= float(u.max()) + 1e-6
-    assert float(out.min()) >= float(u.min()) - 1e-6
-
-
-@settings(max_examples=20, deadline=None)
-@given(shape=grids, seed=st.integers(0, 2**30))
-def test_property_linearity(shape, seed):
-    """The stencil operator is linear: A(au + bv) = aA(u) + bA(v)."""
-    ny, nx = shape
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    u = jax.random.normal(k1, (ny + 2, nx + 2))
-    v = jax.random.normal(k2, (ny + 2, nx + 2))
-    spec = S.jacobi_2d_5pt()
-    lhs = S.apply_stencil(2.0 * u + 3.0 * v, spec)
-    rhs = 2.0 * S.apply_stencil(u, spec) + 3.0 * S.apply_stencil(v, spec)
-    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-5)
-
-
-@settings(max_examples=15, deadline=None)
-@given(shape=grids, seed=st.integers(0, 2**30), t=st.integers(1, 4))
-def test_property_kernel_equals_ref_random(shape, seed, t):
-    """Pallas kernels agree with the oracle on arbitrary grids (hypothesis)."""
-    ny, nx = shape
-    nx = max(8, nx)
-    key = jax.random.PRNGKey(seed)
-    u = jax.random.normal(key, (ny + 2, nx + 2), jnp.float32)
-    want = ref.jacobi_multi(u, t)
-    got = ops.jacobi_step(u, version="v2", bm=4, t=t, interpret=True)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
-
-
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**30))
-def test_property_constant_field_is_fixed_point(seed):
-    """A constant grid (matching BCs) is a fixed point of the sweep."""
-    c = float(jax.random.uniform(jax.random.PRNGKey(seed), ()))
-    u = jnp.full((10, 12), c, jnp.float32)
-    out = S.apply_stencil(u, S.jacobi_2d_5pt())
-    np.testing.assert_allclose(np.asarray(out), np.asarray(u), rtol=1e-6)

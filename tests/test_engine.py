@@ -1,0 +1,280 @@
+"""Spec-driven stencil engine: policy equivalence, plan cache, dispatch.
+
+Every registered execution policy must reproduce the pure-jnp
+``apply_stencil`` oracle for every stencil shape (5-point Jacobi, 9-point
+Laplace, 1-D advection embedded as 2-D) in both f32 and bf16, in interpret
+mode — that is the acceptance bar for the engine replacing the hand-written
+kernel zoo.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import jacobi as J
+from repro.core.stencil import (StencilSpec, advection_2d_3pt, apply_stencil,
+                                jacobi_2d_5pt, laplace_2d_9pt,
+                                make_laplace_problem)
+from repro.engine.plan import PlanError
+
+
+def _problem(ny, nx, dtype, seed=0):
+    u = make_laplace_problem(ny, nx, dtype=dtype)
+    noise = jax.random.uniform(jax.random.PRNGKey(seed), (ny, nx), jnp.float32)
+    return u.at[1:-1, 1:-1].set(noise.astype(dtype))
+
+
+def _oracle(u, spec, n=1):
+    for _ in range(n):
+        u = apply_stencil(u, spec)
+    return u
+
+
+def _tol(dtype):
+    return (dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16
+            else dict(rtol=1e-6, atol=1e-6))
+
+
+SPECS = {
+    "jacobi5": jacobi_2d_5pt(),
+    "laplace9": laplace_2d_9pt(),
+    "advection2d": advection_2d_3pt(),
+}
+DTYPES = [jnp.float32, jnp.bfloat16]
+POLICIES = engine.available_policies()
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: every policy x every spec x every dtype == oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("spec_name", list(SPECS))
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_policy_matches_oracle_single_sweep(policy, spec_name, dtype):
+    spec = SPECS[spec_name]
+    u = _problem(30, 128, dtype)
+    got = engine.run(u, spec, policy=policy, iters=1, bm=8, t=1,
+                     interpret=True)
+    want = _oracle(u, spec)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("spec_name", list(SPECS))
+def test_policy_matches_oracle_multi_sweep(policy, spec_name):
+    """iters=5 with t=2 exercises the temporal remainder path (2+2+1)."""
+    spec = SPECS[spec_name]
+    u = _problem(24, 128, jnp.float32)
+    got = engine.run(u, spec, policy=policy, iters=5, bm=8, t=2,
+                     interpret=True)
+    want = _oracle(u, spec, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_policy_radius2_spec(policy):
+    """Anisotropic radius-2 spec: generality beyond the face-neighbour zoo."""
+    spec = StencilSpec(offsets=((-2, 0), (-1, 0), (0, 0), (0, -2), (0, 1)),
+                       weights=(0.1, 0.3, 0.2, 0.15, 0.25))
+    u = _problem(30, 128, jnp.float32)
+    got = engine.run(u, spec, policy=policy, iters=2, bm=7, t=2,
+                     interpret=True)
+    want = _oracle(u, spec, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_boundary_ring_is_preserved(policy):
+    u = _problem(32, 128, jnp.float32)
+    got = engine.run(u, jacobi_2d_5pt(), policy=policy, iters=1, bm=16, t=1,
+                     interpret=True)
+    for idx in [(0, slice(None)), (-1, slice(None)),
+                (slice(None), 0), (slice(None), -1)]:
+        np.testing.assert_array_equal(np.asarray(got[idx]), np.asarray(u[idx]))
+
+
+def test_temporal_deep_fusion_matches_oracle():
+    u = _problem(32, 128, jnp.float32)
+    got = engine.run(u, jacobi_2d_5pt(), policy="temporal", iters=8, t=8,
+                     bm=16, interpret=True)
+    want = _oracle(u, jacobi_2d_5pt(), 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_auto_policy_matches_oracle():
+    u = _problem(24, 128, jnp.float32)
+    got = engine.run(u, laplace_2d_9pt(), policy="auto", iters=6, bm=8,
+                     interpret=True)
+    want = _oracle(u, laplace_2d_9pt(), 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Planning: cache behaviour and validation
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hits():
+    engine.plan_cache_clear()
+    p1 = engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(), "rowchunk",
+                         bm=16)
+    info = engine.plan_cache_info()
+    assert info.misses == 1 and info.hits == 0
+    p2 = engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(), "rowchunk",
+                         bm=16)
+    info = engine.plan_cache_info()
+    assert info.hits == 1 and info.misses == 1
+    assert p1 is p2  # memoized object identity, not just equality
+    engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(), "dbuf", bm=16)
+    assert engine.plan_cache_info().misses == 2
+
+
+def test_plan_values():
+    plan = engine.plan_for((34, 130), jnp.bfloat16, laplace_2d_9pt(),
+                           "temporal", bm=16, t=4)
+    assert plan.bm == 16 and plan.t == 4 and plan.radius == 1
+    assert plan.nblocks == 2
+    assert plan.window_rows == 16 + 2 * 4  # bm + 2*t*r
+    assert plan.dtype_bytes == 2
+    assert "temporal" in plan.describe()
+    # bm request snapped to a divisor of the interior height
+    plan2 = engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(),
+                            "rowchunk", bm=15)
+    assert 32 % plan2.bm == 0 and plan2.bm <= 15
+
+
+def test_plan_validation_errors():
+    from repro.core.stencil import advection_1d_3pt
+    with pytest.raises(PlanError):  # 1-D spec must be embedded as 2-D
+        engine.plan_for((34, 130), jnp.float32, advection_1d_3pt(), "rowchunk")
+    with pytest.raises(PlanError):  # grid smaller than the stencil ring
+        engine.plan_for((2, 130), jnp.float32, jacobi_2d_5pt(), "rowchunk")
+    with pytest.raises(PlanError):  # t < 1 is meaningless
+        engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(), "temporal",
+                        t=0)
+    with pytest.raises(PlanError):  # unknown policy
+        engine.plan_for((34, 130), jnp.float32, jacobi_2d_5pt(), "warp9")
+    with pytest.raises(PlanError):  # VMEM budget exceeded
+        engine.plan_for((20002, 20002), jnp.float32, jacobi_2d_5pt(),
+                        "temporal", bm=20000, t=64)
+
+
+def test_unknown_policy_lists_registry():
+    u = _problem(16, 128, jnp.float32)
+    with pytest.raises(ValueError, match="rowchunk"):
+        engine.run(u, jacobi_2d_5pt(), policy="nope", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Registry-driven dispatch and benchmark enumeration
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert POLICIES == ("shifted", "rowchunk", "dbuf", "temporal")
+    fused = [p.name for p in engine.registry() if p.fused]
+    assert fused == ["temporal"]
+    for p in engine.registry():
+        assert p.bytes_per_point(jacobi_2d_5pt(), 2, 8) > 0
+        assert p.paper_ref
+
+
+def test_benchmark_variants_come_from_registry():
+    from benchmarks.common import engine_variant_rows
+    rows = engine_variant_rows(t=8)
+    names = [r[1] for r in rows]
+    assert names == ["reference", *POLICIES]
+    # the temporal row's traffic model reflects the fusion depth
+    by_policy = {r[1]: r[3] for r in rows}
+    assert by_policy["temporal"] == pytest.approx(by_policy["rowchunk"] / 8)
+    assert by_policy["shifted"] > by_policy["rowchunk"]
+
+
+def test_resolve_auto_heuristic():
+    spec = jacobi_2d_5pt()
+    # many sweeps + window fits -> temporal
+    assert engine.resolve_auto((130, 130), jnp.float32, spec,
+                               iters=100) == "temporal"
+    # single sweep, several blocks -> dbuf hides the DMA latency
+    assert engine.resolve_auto((1026, 130), jnp.float32, spec,
+                               iters=1) == "dbuf"
+    # single sweep, single resident block -> nothing to prefetch
+    assert engine.resolve_auto((18, 130), jnp.float32, spec, iters=1) \
+        == "rowchunk"
+
+
+# ---------------------------------------------------------------------------
+# Driver integration: policy names + temporal remainder regression
+# ---------------------------------------------------------------------------
+
+def test_jacobi_run_accepts_policy_name():
+    u = _problem(16, 128, jnp.float32)
+    got = J.jacobi_run(u, 3, policy="dbuf", bm=8, interpret=True)
+    want = _oracle(u, jacobi_2d_5pt(), 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):  # callable + name is ambiguous
+        J.jacobi_run(u, 3, lambda v: v, policy="dbuf")
+
+
+def test_jacobi_run_counts_sweeps_exactly_for_fused_policy():
+    """Regression: policy="temporal" must advance exactly ``iters`` sweeps
+    (not iters * t), and per-sweep drivers must refuse fused policies."""
+    u = _problem(32, 128, jnp.float32)
+    want = _oracle(u, jacobi_2d_5pt(), 4)
+    got = J.jacobi_run(u, 4, policy="temporal", bm=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="fused"):
+        J.jacobi_solve(u, policy="temporal", interpret=True)
+    with pytest.raises(ValueError, match="fused"):
+        J.jacobi_run_unrolled(u, 4, policy="temporal")
+
+
+def test_jacobi_run_temporal_non_divisible_iters():
+    """Regression: iters % t != 0 used to raise; the remainder now runs
+    under a non-fused registry policy."""
+    u = _problem(32, 128, jnp.float32)
+    want = _oracle(u, jacobi_2d_5pt(), 7)
+    got = J.jacobi_run_temporal(u, 7, t=4, bm=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # legacy path: explicit t-step callable, remainder still handled
+    from repro.kernels import ops
+    tstep = ops.make_step_fn("v2", t=4, bm=16, interpret=True)
+    got2 = J.jacobi_run_temporal(u, 7, tstep, t=4)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # iters < t: pure remainder, zero fused blocks
+    got3 = J.jacobi_run_temporal(u, 2, t=4, bm=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got3),
+                               np.asarray(_oracle(u, jacobi_2d_5pt(), 2)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_deprecated_wrappers_still_work():
+    from repro.kernels import jacobi as legacy
+    from repro.kernels.stencil_general import stencil_rowchunk
+    u = _problem(16, 128, jnp.float32)
+    want = _oracle(u, jacobi_2d_5pt())
+    for fn in [legacy.jacobi_v0_shifted, legacy.jacobi_v1_rowchunk,
+               legacy.jacobi_v1_dbuf]:
+        with pytest.warns(DeprecationWarning):
+            got = fn(u, bm=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+    with pytest.warns(DeprecationWarning):
+        got = legacy.jacobi_v2_temporal(u, t=2, bm=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_oracle(u, jacobi_2d_5pt(), 2)),
+                               rtol=1e-6, atol=1e-6)
+    with pytest.warns(DeprecationWarning):
+        got = stencil_rowchunk(u, laplace_2d_9pt(), bm=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_oracle(u, laplace_2d_9pt())),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,67 @@
+"""Property-based tests (hypothesis): invariants of the Jacobi operator.
+
+Kept separate from test_core_stencil.py so the example-based suite still
+collects on machines without hypothesis installed.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stencil as S
+from repro.kernels import ops, ref
+
+grids = st.tuples(st.integers(4, 24), st.integers(4, 24))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30))
+def test_property_max_principle(shape, seed):
+    """Jacobi sweep output is bounded by the input's min/max (averaging)."""
+    ny, nx = shape
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.uniform(key, (ny + 2, nx + 2), minval=-3.0, maxval=5.0)
+    out = S.apply_stencil(u, S.jacobi_2d_5pt())
+    assert float(out.max()) <= float(u.max()) + 1e-6
+    assert float(out.min()) >= float(u.min()) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30))
+def test_property_linearity(shape, seed):
+    """The stencil operator is linear: A(au + bv) = aA(u) + bA(v)."""
+    ny, nx = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (ny + 2, nx + 2))
+    v = jax.random.normal(k2, (ny + 2, nx + 2))
+    spec = S.jacobi_2d_5pt()
+    lhs = S.apply_stencil(2.0 * u + 3.0 * v, spec)
+    rhs = 2.0 * S.apply_stencil(u, spec) + 3.0 * S.apply_stencil(v, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=grids, seed=st.integers(0, 2**30), t=st.integers(1, 4))
+def test_property_kernel_equals_ref_random(shape, seed, t):
+    """Pallas kernels agree with the oracle on arbitrary grids (hypothesis)."""
+    ny, nx = shape
+    nx = max(8, nx)
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (ny + 2, nx + 2), jnp.float32)
+    want = ref.jacobi_multi(u, t)
+    got = ops.jacobi_step(u, version="v2", bm=4, t=t, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_constant_field_is_fixed_point(seed):
+    """A constant grid (matching BCs) is a fixed point of the sweep."""
+    c = float(jax.random.uniform(jax.random.PRNGKey(seed), ()))
+    u = jnp.full((10, 12), c, jnp.float32)
+    out = S.apply_stencil(u, S.jacobi_2d_5pt())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u), rtol=1e-6)
