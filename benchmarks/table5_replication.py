@@ -9,6 +9,8 @@ offsets from resident data (v1's in-VMEM shifts), never by re-reading.
 import jax
 import jax.numpy as jnp
 
+from repro import engine
+from repro.core.stencil import jacobi_2d_5pt
 from repro.kernels.stream import stream_replicated
 from benchmarks.common import time_fn, row, HBM_BW
 
@@ -26,6 +28,13 @@ def run():
         model = factor * total_bytes / HBM_BW
         rows.append(row(f"replicated_x{factor}", t * 1e6,
                         f"model_v5e_s={model:.6f}"))
+    # The registry's own traffic models tell the same story: the shifted
+    # policy re-reads per tap, rowchunk serves taps from resident data.
+    spec = jacobi_2d_5pt()
+    for name in ("shifted", "rowchunk"):
+        bpp = engine.get_policy(name).bytes_per_point(spec, 4, 1)
+        rows.append(row(f"registry_{name}", 0.0,
+                        f"bytes_per_point={bpp};taps={spec.taps}"))
     rows.append(row("paper_x1", 0.0, "paper_s=0.011"))
     rows.append(row("paper_x32", 0.0, "paper_s=0.185"))
     return rows

@@ -18,26 +18,21 @@ from repro.roofline import V5E
 
 _SCRIPT = r"""
 import jax, jax.numpy as jnp, json
+from repro import engine
 from repro.core.stencil import make_laplace_problem
-from repro.core.decomp import split_ringed
-from repro.core import halo
 from repro.hlo_analysis import analyze_hlo
 
 out = []
 u = make_laplace_problem(1024, 9216, dtype=jnp.bfloat16)  # paper's domain
-interior, bc = split_ringed(u)
 for ndev in (1, 2, 4, 8):
     mesh = jax.make_mesh((ndev,), ("x",))
     for depth in (1, 8):
-        step = halo.make_distributed_step(mesh, row_axis="x", col_axis=None,
-                                          depth=depth)
-        fn = jax.jit(lambda i, b: halo.jacobi_run_distributed(
-            i, b, 16 if depth > 1 else 8, step, depth=depth))
-        comp = fn.lower(jax.eval_shape(lambda: interior),
-                        {k: jax.eval_shape(lambda v=v: v) for k, v in bc.items()}
-                        ).compile()
-        la = analyze_hlo(comp.as_text(), ndev)
         sweeps = 16 if depth > 1 else 8
+        fn = jax.jit(lambda v: engine.run_distributed(
+            v, mesh=mesh, policy="reference", iters=sweeps, t=depth,
+            row_axis="x"))
+        comp = fn.lower(jax.eval_shape(lambda: u)).compile()
+        la = analyze_hlo(comp.as_text(), ndev)
         out.append({"ndev": ndev, "depth": depth,
                     "coll_bytes_per_sweep": la.collective_bytes / sweeps,
                     "hbm_proxy_per_sweep": la.hbm_proxy_bytes / sweeps})

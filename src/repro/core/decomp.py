@@ -45,3 +45,35 @@ def check_divisible(hi: int, wi: int, px: int, py: int) -> None:
     if hi % px or wi % py:
         raise ValueError(
             f"interior {hi}x{wi} not divisible by process grid {px}x{py}")
+
+
+def split_ringed_bands(u: jax.Array, r: int = 1):
+    """Radius-``r`` generalization of :func:`split_ringed`.
+
+    A ringed grid ``(Hi + 2r, Wi + 2r)`` is split into the ``(Hi, Wi)``
+    interior plus four Dirichlet *bands* of thickness ``r`` (top/bottom:
+    ``(r, Wi)``, left/right: ``(Hi, r)``) — 2-D arrays rather than vectors,
+    so deep-radius stencils keep their full boundary data. Ring corners are
+    dropped, as in :func:`split_ringed` (irrelevant for face-neighbour taps).
+    """
+    interior = u[r:-r, r:-r]
+    bc = {
+        "top": u[:r, r:-r],
+        "bottom": u[-r:, r:-r],
+        "left": u[r:-r, :r],
+        "right": u[r:-r, -r:],
+    }
+    return interior, bc
+
+
+def join_ringed_bands(interior: jax.Array, bc: Dict[str, jax.Array],
+                      r: int = 1, corner: float = 0.0) -> jax.Array:
+    """Inverse of :func:`split_ringed_bands` (corners filled with ``corner``)."""
+    hi, wi = interior.shape
+    u = jnp.full((hi + 2 * r, wi + 2 * r), corner, interior.dtype)
+    u = u.at[r:-r, r:-r].set(interior)
+    u = u.at[:r, r:-r].set(bc["top"])
+    u = u.at[-r:, r:-r].set(bc["bottom"])
+    u = u.at[r:-r, :r].set(bc["left"])
+    u = u.at[r:-r, -r:].set(bc["right"])
+    return u

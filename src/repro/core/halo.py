@@ -1,4 +1,13 @@
-"""Distributed stencils: halo exchange over mesh axes via shard_map.
+"""Hand-tuned 5-point distributed Jacobi: halo exchange via shard_map.
+
+This module keeps the paper-specific fast path — a depth-1 exchange whose
+halo-independent inner region is computed while the ``ppermute`` is in
+flight (``overlap=True``). Everything general — deep (depth-``t``) halos,
+Dirichlet-band pinning, corner transport, arbitrary
+:class:`~repro.core.stencil.StencilSpec` and engine policies per shard —
+lives in :mod:`repro.dist.stencil` behind ``repro.engine.run_distributed``;
+:func:`make_distributed_step` delegates there for every non-overlap case so
+the machinery exists exactly once.
 
 This is the paper's §VII scaled-up solver done the way the paper *couldn't*:
 the Grayskull's four PCIe cards cannot read each other's memory, so the
@@ -25,14 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:
-    from jax import shard_map
-except ImportError:  # jax < 0.6: experimental location, check_rep spelling
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs, check_vma=True):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=check_vma)
+from repro.dist._compat import shard_map
 
 
 def _fwd_perm(n: int):
@@ -73,82 +75,46 @@ def _five_point(ext: jax.Array) -> jax.Array:
             ).astype(ext.dtype)
 
 
-def _local_step(u, top, bottom, left, right, *, row_axis, col_axis,
-                px, py, depth, overlap, local_sweep=None):
-    """One (or ``depth``) Jacobi sweep(s) on the local shard.
+def _local_step_overlap(u, top, bottom, left, right, *, row_axis, col_axis,
+                        px, py):
+    """One overlapped 5-pt sweep on the local shard (depth-1 fast path).
 
-    u: (hl, wl) local interior block. top/bottom: (wl,) local Dirichlet
-    slices; left/right: (hl,). ``depth`` local sweeps are performed per halo
-    exchange (depth-t halos), all inside this call.
+    The inner region depends on no halo, so it is computed up front — XLA's
+    latency-hiding scheduler runs it while the ppermutes are in flight —
+    and the halo-dependent edge ring is patched in afterwards.
     """
-    hl, wl = u.shape
-    if depth > min(hl, wl):
-        raise ValueError(f"halo depth {depth} exceeds local block {u.shape}")
     ix = jax.lax.axis_index(row_axis) if px > 1 else 0
     iy = jax.lax.axis_index(col_axis) if py > 1 else 0
 
-    if overlap and depth == 1:
-        # Halo-independent inner region: rows/cols >=1 away from the edge.
-        inner = _five_point(u)  # (hl-2, wl-2), valid for local-interior cells
+    inner = _five_point(u)  # (hl-2, wl-2), valid for local-interior cells
 
-    # Phase 1 — rows. Substitute Dirichlet rows on physical edges; for
-    # depth>1 the Dirichlet row is replicated across the halo band (cells
-    # beyond the first ring are pinned and never influence the output).
-    uh, dh = exchange_rows(u, row_axis, px, depth)
-    top_r = jnp.broadcast_to(top[None, :], (depth, wl)).astype(u.dtype)
-    bot_r = jnp.broadcast_to(bottom[None, :], (depth, wl)).astype(u.dtype)
-    uh = jnp.where(ix == 0, top_r, uh)
-    dh = jnp.where(ix == px - 1, bot_r, dh)
-    ext_r = jnp.concatenate([uh, u, dh], axis=0)  # (hl+2d, wl)
+    # Rows: substitute Dirichlet rows on physical edges.
+    uh, dh = exchange_rows(u, row_axis, px, 1)
+    uh = jnp.where(ix == 0, top[None, :].astype(u.dtype), uh)
+    dh = jnp.where(ix == px - 1, bottom[None, :].astype(u.dtype), dh)
+    ext_r = jnp.concatenate([uh, u, dh], axis=0)  # (hl+2, wl)
 
-    # Extend the left/right Dirichlet slices across the halo rows (their
-    # values live on the row neighbours) so BC columns span full ext height.
+    # Left/right Dirichlet columns span the halo rows (values live on the
+    # row neighbours), so extend them through the same exchange.
     lcol = left[:, None].astype(u.dtype)
     rcol = right[:, None].astype(u.dtype)
-    lt, lb = exchange_rows(lcol, row_axis, px, depth)
-    rt, rb = exchange_rows(rcol, row_axis, px, depth)
-    left_ext = jnp.concatenate([lt, lcol, lb], axis=0)    # (hl+2d, 1)
+    lt, lb = exchange_rows(lcol, row_axis, px, 1)
+    rt, rb = exchange_rows(rcol, row_axis, px, 1)
+    left_ext = jnp.concatenate([lt, lcol, lb], axis=0)    # (hl+2, 1)
     right_ext = jnp.concatenate([rt, rcol, rb], axis=0)
 
-    # Phase 2 — columns of the row-extended block. Exchanging ext_r (not u)
-    # transports the corner halos needed by depth>1 temporal blocking.
-    lh, rh = exchange_cols(ext_r, col_axis, py, depth)    # (hl+2d, depth)
-    lef_r = jnp.broadcast_to(left_ext, (hl + 2 * depth, depth))
-    rig_r = jnp.broadcast_to(right_ext, (hl + 2 * depth, depth))
-    lh = jnp.where(iy == 0, lef_r, lh)
-    rh = jnp.where(iy == py - 1, rig_r, rh)
-    ext = jnp.concatenate([lh, ext_r, rh], axis=1)        # (hl+2d, wl+2d)
+    # Columns of the row-extended block.
+    lh, rh = exchange_cols(ext_r, col_axis, py, 1)
+    lh = jnp.where(iy == 0, left_ext, lh)
+    rh = jnp.where(iy == py - 1, right_ext, rh)
+    ext = jnp.concatenate([lh, ext_r, rh], axis=1)        # (hl+2, wl+2)
 
-    if depth == 1:
-        if local_sweep is not None:
-            new = local_sweep(ext)[1:-1, 1:-1]
-        elif overlap:
-            new = _five_point(ext)
-            # Patch: keep the pre-computed inner block (identical values —
-            # this keeps the halo-dependent edge compute on the critical
-            # path as small as possible; XLA dedups, on TPU the pattern
-            # lowers to overlapped ppermute + inner fusion).
-            new = new.at[1:-1, 1:-1].set(inner)
-        else:
-            new = _five_point(ext)
-        return new
-
-    # depth-t halos: t local sweeps, valid region shrinking into the halo.
-    # Dirichlet cells must stay pinned; roll-free shrinking-slice sweeps.
-    orig = ext
-    # Mask of physically-fixed cells inside ext (domain edges only).
-    rr = jnp.arange(hl + 2 * depth)
-    cc = jnp.arange(wl + 2 * depth)
-    fixed = jnp.zeros(ext.shape, bool)
-    fixed = fixed | ((ix == 0) & (rr[:, None] <= depth - 1))
-    fixed = fixed | ((ix == px - 1) & (rr[:, None] >= hl + depth))
-    fixed = fixed | ((iy == 0) & (cc[None, :] <= depth - 1))
-    fixed = fixed | ((iy == py - 1) & (cc[None, :] >= wl + depth))
-    for _ in range(depth):
-        upd = jnp.zeros_like(ext)
-        upd = upd.at[1:-1, 1:-1].set(_five_point(ext))
-        ext = jnp.where(fixed, orig, upd)
-    return ext[depth:-depth, depth:-depth]
+    new = _five_point(ext)
+    # Patch: keep the pre-computed inner block (identical values — this
+    # keeps the halo-dependent edge compute on the critical path as small
+    # as possible; XLA dedups, on TPU the pattern lowers to overlapped
+    # ppermute + inner fusion).
+    return new.at[1:-1, 1:-1].set(inner)
 
 
 def make_distributed_step(
@@ -162,31 +128,52 @@ def make_distributed_step(
     """Build a jit-able global step: (interior, bc) -> interior'.
 
     The returned function advances the grid by ``depth`` Jacobi sweeps with
-    one halo exchange. ``local_sweep`` optionally plugs a Pallas kernel in
-    for the local computation (depth=1 only).
+    one halo exchange. ``local_sweep`` optionally plugs a custom kernel in
+    for the local computation (ringed contract: full grid in, full grid out,
+    outer ring copied through). Everything except the depth-1 overlapped
+    5-point fast path delegates to :mod:`repro.dist.stencil`.
     """
     px = mesh.shape[row_axis] if row_axis else 1
     py = mesh.shape[col_axis] if col_axis else 1
-    row_axis = row_axis or "_row_unused"
-    col_axis = col_axis or "_col_unused"
 
-    fn = functools.partial(
-        _local_step, row_axis=row_axis, col_axis=col_axis, px=px, py=py,
-        depth=depth, overlap=overlap, local_sweep=local_sweep)
+    if depth == 1 and overlap and local_sweep is None:
+        r_ax = row_axis or "_row_unused"
+        c_ax = col_axis or "_col_unused"
+        fn = functools.partial(_local_step_overlap, row_axis=r_ax,
+                               col_axis=c_ax, px=px, py=py)
+        rows = P(r_ax if px > 1 else None)
+        cols = P(c_ax if py > 1 else None)
+        grid_spec = P(r_ax if px > 1 else None, c_ax if py > 1 else None)
+        sharded = shard_map(
+            fn, mesh=mesh,
+            in_specs=(grid_spec, cols, cols, rows, rows),
+            out_specs=grid_spec,
+            check_vma=False,
+        )
 
-    rows = P(row_axis if px > 1 else None)
-    cols = P(col_axis if py > 1 else None)
-    grid_spec = P(row_axis if px > 1 else None, col_axis if py > 1 else None)
+        def step(interior: jax.Array, bc: Dict[str, jax.Array]) -> jax.Array:
+            return sharded(interior, bc["top"], bc["bottom"], bc["left"],
+                           bc["right"])
 
-    sharded = shard_map(
-        fn, mesh=mesh,
-        in_specs=(grid_spec, cols, cols, rows, rows),
-        out_specs=grid_spec,
-        check_vma=False,
-    )
+        return step
+
+    # General path: one shared implementation of deep halos, Dirichlet
+    # pinning, and corner transport. Lazy import — dist.stencil imports the
+    # exchange helpers from this module.
+    from repro.core.stencil import apply_stencil, jacobi_2d_5pt
+    from repro.dist import stencil as dstencil
+
+    spec = jacobi_2d_5pt()
+    sweep = local_sweep if local_sweep is not None else (
+        lambda ext: apply_stencil(ext, spec))
+    band_step = dstencil.make_sharded_step(mesh, spec, sweep,
+                                           row_axis=row_axis,
+                                           col_axis=col_axis, t=depth)
 
     def step(interior: jax.Array, bc: Dict[str, jax.Array]) -> jax.Array:
-        return sharded(interior, bc["top"], bc["bottom"], bc["left"], bc["right"])
+        bands = {"top": bc["top"][None, :], "bottom": bc["bottom"][None, :],
+                 "left": bc["left"][:, None], "right": bc["right"][:, None]}
+        return band_step(interior, bands)
 
     return step
 

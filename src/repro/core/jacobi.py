@@ -73,6 +73,9 @@ def jacobi_run(u0: jax.Array, iters: int, step: StepFn | str | None = None, *,
                bm: int | None = None,
                interpret: bool | None = None) -> jax.Array:
     """Run a fixed number of Jacobi sweeps (paper's termination criterion)."""
+    if callable(step) and policy is not None:
+        raise ValueError("pass either a step callable or a policy name, "
+                         "not both")
     name = policy if policy is not None else (step if isinstance(step, str)
                                               else None)
     if name is not None and name != REFERENCE:

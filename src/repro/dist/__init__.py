@@ -1,0 +1,25 @@
+"""Distributed execution layer: sharding rules, pipeline schedule, and the
+mesh-aware stencil decomposition.
+
+Submodules:
+
+* :mod:`repro.dist.sharding` — logical-axis -> mesh-axis rule tables,
+  ``constrain``, and the tree/state/batch sharding builders the launchers use.
+* :mod:`repro.dist.pipeline` — microbatched pipeline-parallel schedule.
+* :mod:`repro.dist.stencil` — depth-``t`` halo exchange running any
+  :class:`~repro.core.stencil.StencilSpec` per shard (the paper's §VII
+  multi-card decomposition done over a real mesh; entry point
+  :func:`repro.engine.run_distributed`).
+"""
+from repro.dist import pipeline, sharding  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    ACT_RULES,
+    DEFAULT_RULES,
+    batch_shardings,
+    constrain,
+    pspec_for,
+    replicated,
+    state_shardings,
+    tree_shardings,
+    use_mesh,
+)

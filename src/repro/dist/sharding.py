@@ -1,0 +1,206 @@
+"""Logical-axis sharding: rule tables mapping model axes to mesh axes.
+
+Every parameter and activation in the codebase is annotated with *logical*
+axis names (``"embed"``, ``"heads"``, ``"batch"``, ...) by the layers and
+:class:`~repro.models.base.ParamBuilder`; nothing outside this module knows
+about meshes. :func:`pspec_for` resolves those names against a concrete mesh
+through an ordered rule table (MaxText-style logical-to-physical rules):
+
+* each rule ``(logical_name, mesh_axes)`` is tried in priority order;
+* a rule only fires if the dimension size is divisible by the mesh-axis
+  extent (the *divisibility fallback* — e.g. 2 KV heads can never take a
+  16-way ``model`` axis, so a later rule lets the KV-sequence dim pick the
+  axis up instead: context parallelism for free);
+* a mesh axis is consumed at most once per array (no axis reuse);
+* multi-axis entries like ``("pod", "data")`` shard one dimension over
+  several mesh axes (FSDP spanning pods) and degrade gracefully to whatever
+  subset of those axes the mesh actually has.
+
+``DEFAULT_RULES`` lays out weights and optimizer state (FSDP on ``embed``,
+TP on ``heads``/``mlp``/``vocab``, EP on ``expert``); ``ACT_RULES`` lays out
+activations (TP on head dims with sequence-parallel fallback).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_flatten_with_path
+
+Axes = Sequence[Optional[str]]
+Rules = tuple[tuple[str, Any], ...]
+
+#: Weight / train-state layout: FSDP shards the embed (contraction) dim over
+#: data(/pod), tensor parallelism shards head/mlp/vocab dims, expert
+#: parallelism shards the expert dim. ``kv_seq`` entries are pure fallbacks.
+DEFAULT_RULES: Rules = (
+    ("expert", "model"),
+    ("embed", ("pod", "data")),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("ssm_inner", "model"),
+    ("batch", ("pod", "data")),
+    ("kv_seq", "model"),
+    ("kv_seq", ("pod", "data")),
+)
+
+#: Activation layout: KV heads take the model axis when they divide it,
+#: otherwise the GQA group (query-head) dim, otherwise the query-sequence
+#: dim — context parallelism as the last resort. Batch always rides data.
+ACT_RULES: Rules = (
+    ("kv_heads", "model"),
+    ("heads", "model"),
+    ("expert", "model"),
+    ("mlp", "model"),
+    ("ssm_inner", "model"),
+    ("vocab", "model"),
+    ("batch", ("pod", "data")),
+    ("qseq", "model"),
+    ("kv_seq", "model"),
+    ("qseq", ("pod", "data")),
+)
+
+
+def pspec_for(axes: Axes, shape: Sequence[int], mesh,
+              rules: Rules | None = None) -> P:
+    """Resolve logical ``axes`` for an array of ``shape`` to a PartitionSpec.
+
+    ``mesh`` only needs a ``.shape`` mapping (duck-typed so rule tables can
+    be unit-tested without devices). Unknown logical names and ``None``
+    entries stay unsharded.
+    """
+    if rules is None:
+        rules = DEFAULT_RULES
+    if len(axes) != len(shape):
+        raise ValueError(f"logical axes {tuple(axes)} do not match array "
+                         f"shape {tuple(shape)}")
+    mesh_shape = dict(mesh.shape)
+    assigned: list[Any] = [None] * len(axes)
+    used: set[str] = set()
+    for name, cand in rules:
+        cand = cand if isinstance(cand, tuple) else (cand,)
+        take = [a for a in cand if a in mesh_shape and a not in used]
+        if not take:
+            continue
+        extent = math.prod(mesh_shape[a] for a in take)
+        for i, ax in enumerate(axes):
+            if ax == name and assigned[i] is None and shape[i] % extent == 0:
+                assigned[i] = tuple(take) if len(take) > 1 else take[0]
+                used.update(take)
+                break
+    return P(*assigned)
+
+
+# ---------------------------------------------------------------------------
+# mesh context — layers call ``constrain`` with no mesh in scope; the active
+# mesh is discovered here (our own stack first, then jax's ``with mesh:``).
+# ---------------------------------------------------------------------------
+
+_MESH_STACK: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for :func:`constrain` / sharded kernel wrappers."""
+    _MESH_STACK.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def _context_mesh():
+    """The innermost active mesh, or None (single-device: constrain no-ops)."""
+    if _MESH_STACK:
+        return _MESH_STACK[-1]
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except (ImportError, AttributeError):
+        pass
+    return None
+
+
+def constrain(x: jax.Array, axes: Axes, rules: Rules | None = None):
+    """Sharding-constraint an activation by logical axes; no-op without a
+    mesh context. This is the only sharding call sites in layers make."""
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    spec = pspec_for(axes, x.shape, mesh, ACT_RULES if rules is None else rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# tree-level sharding builders (launchers, checkpoint/remesh, dryrun)
+# ---------------------------------------------------------------------------
+
+def replicated(mesh) -> NamedSharding:
+    """Fully-replicated sharding (scalars, metrics)."""
+    return NamedSharding(mesh, P())
+
+
+def _is_axes(x) -> bool:
+    # A logical-axes leaf is a *plain* tuple of names; NamedTuples (KVCache
+    # spec trees) must keep flattening as containers.
+    return (type(x) is tuple
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_shardings(tree, specs, mesh, rules: Rules | None = None):
+    """NamedShardings for a pytree whose logical axes mirror its structure."""
+    return jax.tree.map(
+        lambda x, s: NamedSharding(mesh, pspec_for(s, x.shape, mesh, rules)),
+        tree, specs)
+
+
+def batch_shardings(batch, mesh):
+    """Data-parallel layout for an input batch: leading dim over data(/pod)."""
+    def one(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, pspec_for(axes, x.shape, mesh, ACT_RULES))
+    return jax.tree.map(one, batch)
+
+
+def _dict_suffix(path) -> tuple[str, ...]:
+    """Trailing run of dict keys in a key path (the param-relative path)."""
+    keys: list[str] = []
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            keys.append(str(entry.key))
+        else:
+            break
+    return tuple(reversed(keys))
+
+
+def state_shardings(state, specs, mesh, rules: Rules | None = None):
+    """Shardings for a full train state (params + optimizer moments).
+
+    ``specs`` describes the *params* tree only; optimizer moments mirror the
+    param tree, so every state leaf is matched to its param's logical axes by
+    dict-path suffix (``opt_state.mu["blk"]["wq"]`` -> ``specs["blk"]["wq"]``).
+    Leaves with no matching spec (step counters, schedules) are replicated.
+    """
+    spec_flat, _ = tree_flatten_with_path(specs, is_leaf=_is_axes)
+    by_path = {
+        tuple(str(e.key) for e in path if isinstance(e, DictKey)): axes
+        for path, axes in spec_flat
+    }
+
+    def one(path, x):
+        axes = by_path.get(_dict_suffix(path))
+        if axes is not None and len(axes) == len(x.shape):
+            return NamedSharding(mesh, pspec_for(axes, x.shape, mesh, rules))
+        return replicated(mesh)
+
+    flat, treedef = tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, x) for p, x in flat])

@@ -43,3 +43,4 @@ from repro.engine.dispatch import (  # noqa: F401
     run,
     step,
 )
+from repro.engine.distributed import run_distributed  # noqa: F401

@@ -177,6 +177,8 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
     p = get_policy(policy)
 
     if p.fused:
+        if t is not None and t < 1:
+            raise PlanError(f"temporal depth t={t} must be >= 1")
         t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
         nfull, rem = divmod(iters, t_eff)
         u = _scan_steps(u, functools.partial(

@@ -67,8 +67,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     otherwise. q (B,Sq,H,hd), k/v (B,Sk,K,hd) -> (B,Sq,H,hd)."""
     from repro.kernels.flash_attention import flash_attention_local
     from repro.dist.sharding import _context_mesh, pspec_for, ACT_RULES
+    from repro.dist._compat import shard_map
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
     if interpret is None:
         interpret = not _on_tpu()

@@ -49,11 +49,8 @@ def main():
                               left=1.0, right=0.0)
 
     if args.devices > 1:
-        # Deferred: halo pulls in shard_map, which single-device runs
-        # (and older jax wheels) don't need.
-        from repro.core.decomp import split_ringed
-        from repro.core import halo
-
+        # Any kernel policy runs per shard inside the depth-t halo loop —
+        # the distributed solve is no longer a separate hard-coded path.
         ndev = len(jax.devices())
         if ndev < args.devices:
             raise SystemExit(
@@ -61,17 +58,23 @@ def main():
                 f"--xla_force_host_platform_device_count={args.devices}")
         mesh = jax.sharding.Mesh(
             np.asarray(jax.devices()[:args.devices]), ("x",))
-        interior, bc = split_ringed(u0)
-        step = halo.make_distributed_step(mesh, row_axis="x", col_axis=None,
-                                          depth=args.depth)
-        run = jax.jit(lambda i: halo.jacobi_run_distributed(
-            i, bc, args.iters, step, depth=args.depth))
-        run(interior).block_until_ready()  # compile
+        policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
+        if policy in ("ref", "reference"):
+            policy = "reference"
+        if policy == "temporal" and args.temporal != args.depth:
+            # Distributed fusion depth is the halo depth: t sweeps per
+            # exchange; the fused kernel runs its single-sweep degenerate.
+            print(f"note: distributed runs fuse --depth={args.depth} sweeps "
+                  f"per halo exchange; --temporal={args.temporal} ignored")
+        run = jax.jit(lambda u: engine.run_distributed(
+            u, mesh=mesh, policy=policy, iters=args.iters, t=args.depth,
+            row_axis="x"))
+        run(u0).block_until_ready()  # compile
         t0 = time.perf_counter()
-        out = run(interior)
+        out = run(u0)
         out.block_until_ready()
         dt = time.perf_counter() - t0
-        result = np.asarray(out)
+        result = np.asarray(out)[1:-1, 1:-1]
     else:
         policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
         if policy == "ref":

@@ -1,0 +1,69 @@
+"""engine.run_distributed == single-device engine.run, bit-for-bit (fp32).
+
+Runs the full matrix in one subprocess (8 forced host devices): 2 mesh
+shapes x 3 policies x 3 stencil specs (face, row, and diagonal-tap — the
+latter exercises physical-corner transport) x halo depths t in {1, 3},
+each compared exactly against the single-device oracle. Dyadic tap weights
+keep every policy's f32 tap accumulation bit-identical regardless of XLA
+fusion; a non-dyadic spec (advection) is additionally checked to 1-ulp.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core.stencil import (StencilSpec, advection_2d_3pt,
+                                jacobi_2d_5pt, make_laplace_problem)
+
+u = make_laplace_problem(32, 64, dtype=jnp.float32)
+u = u.at[1:-1, 1:-1].set(jax.random.uniform(jax.random.PRNGKey(0), (32, 64)))
+diffusion_row = StencilSpec(offsets=((0, -1), (0, 0), (0, 1)),
+                            weights=(0.25, 0.5, 0.25))
+# Diagonal taps read the physical ring corners -> exercises corner transport.
+diag9 = StencilSpec(offsets=((-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1),
+                             (1, -1), (1, 0), (1, 1)),
+                    weights=(0.125,) * 8)
+ITERS = 6
+failures = 0
+for spec, name in [(jacobi_2d_5pt(), "jacobi5"), (diffusion_row, "diff3"),
+                   (diag9, "diag9")]:
+    want = np.asarray(engine.run(u, spec, policy="rowchunk", iters=ITERS))
+    for mesh_shape, axes in [((4,), ("x",)), ((2, 2), ("x", "y"))]:
+        mesh = jax.make_mesh(mesh_shape, axes)
+        for policy in ("reference", "shifted", "rowchunk"):
+            for t in (1, 3):
+                got = np.asarray(engine.run_distributed(
+                    u, spec, mesh=mesh, policy=policy, iters=ITERS, t=t))
+                exact = bool((got == want).all())
+                tag = f"{name} mesh={mesh_shape} {policy} t={t}"
+                print(("ok   " if exact else "FAIL ") + tag)
+                failures += not exact
+
+# Non-dyadic weights: XLA fusion may differ by 1 ulp between programs.
+adv = advection_2d_3pt()
+want = np.asarray(engine.run(u, adv, policy="rowchunk", iters=ITERS))
+mesh = jax.make_mesh((4,), ("x",))
+got = np.asarray(engine.run_distributed(u, adv, mesh=mesh, policy="rowchunk",
+                                        iters=ITERS, t=2))
+np.testing.assert_allclose(got, want, rtol=0, atol=2e-7)
+print("advection close ok")
+assert failures == 0, f"{failures} exactness failures"
+print("DIST ENGINE OK")
+"""
+
+
+@pytest.mark.slow
+def test_run_distributed_matches_engine_run_bitexact():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"
+    assert "DIST ENGINE OK" in proc.stdout

@@ -39,8 +39,10 @@ for name, f in [("scan", f_scan), ("unroll", f_unroll)]:
     comp = jax.jit(f, in_shardings=(wsh, w2sh, xsh)).lower(
         wsds, w2sds, xsds).compile()
     la = analyze_hlo(comp.as_text(), 8)
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # jax<0.5 wraps in a list
     out[name] = {"dot": la.dot_flops, "coll": la.collective_bytes,
-                 "xla": float(comp.cost_analysis().get("flops", 0))}
+                 "xla": float(ca.get("flops", 0))}
 print(json.dumps(out))
 """
 

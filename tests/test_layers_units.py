@@ -6,9 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.layers.rope import apply_rope
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.layers.rope import apply_rope  # noqa: E402
 from repro.layers import basic
 from repro.layers.moe import moe_init, moe_ffn
 from repro.models.base import ModelConfig, ParamBuilder

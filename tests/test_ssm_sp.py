@@ -36,7 +36,7 @@ def test_general_stencil_kernel_matches_ref(spec):
 SP_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.dist._compat import shard_map
 from repro.launch.mesh import make_mesh
 from repro.layers.ssm import ssd_scan
 from repro.core.ssm_sp import ssd_sequence_parallel, conv_halo_exchange

@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.train import optimizer as O
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.train import optimizer as O  # noqa: E402
 from repro.train import checkpoint as C
 from repro.train.data import DataConfig, SyntheticLM
 from repro.train.compression import (init_ef, quantize_int8,
