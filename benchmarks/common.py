@@ -4,32 +4,55 @@ Two kinds of numbers appear in every table:
   * ``us_per_call`` — measured wall time of the jitted function on THIS
     host (CPU; Pallas kernels run in interpret mode). Only *relative*
     comparisons are meaningful — interpret mode is a correctness vehicle.
-  * ``derived``     — the v5e roofline model for the same operation
-    (bytes/point, transactions, flops), which is the number the paper's
-    tables are compared against. Modeling constants live in repro.roofline.
+  * ``derived``     — a device-model roofline for the same operation
+    (bytes/point, transactions, flops). Modeling constants come from the
+    device registry (``repro.engine.device``) — the same models the
+    planner validates against — so a table can price any registered chip,
+    not just the v5e.
 
 CSV convention (required by the harness): ``name,us_per_call,derived``.
+
+Smoke mode: with ``REPRO_BENCH_DRY=1`` in the environment, ``time_fn``
+skips execution and returns 0.0 — every table then exercises its full
+row/model/registry logic (the part that rots under refactors) without
+paying for interpret-mode kernel walltime. CI runs the whole suite this
+way on every push.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.roofline import V5E
+from repro.engine.device import DeviceModel, get_device
+from repro.roofline import V5E  # noqa: F401  (re-export for the tables)
 
-# VPU (vector unit) throughput assumption for non-matmul stencil math on
-# v5e: 8 lanes x 128 sublanes? -- we use 1/50 of MXU bf16 peak, the usual
-# planning number for elementwise f32 work.
-VPU_FLOPS = V5E["peak_flops"] / 50.0  # ~3.9 TFLOP/s
-HBM_BW = V5E["hbm_bw"]
+_V5E = get_device("tpu_v5e")
+
+# Elementwise (non-matmul) throughput for stencil math on v5e, and the rest
+# of the legacy module constants — all registry-derived now.
+VPU_FLOPS = _V5E.vector_flops
+HBM_BW = _V5E.dram_bw
 TXN_OVERHEAD_S = 1e-6   # per-DMA-descriptor issue cost model
-CHIP_WATTS = V5E["tdp_watts"]
+CHIP_WATTS = _V5E.tdp_watts
+
+
+def dry_run() -> bool:
+    """True when the benchmark suite runs in modeled/dry (smoke) mode.
+
+    Falsy spellings ("", "0", "false", "no", "off") disable it, so
+    ``REPRO_BENCH_DRY=0`` means what it says.
+    """
+    val = os.environ.get("REPRO_BENCH_DRY", "").strip().lower()
+    return val not in ("", "0", "false", "no", "off")
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    if dry_run():
+        return 0.0
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -53,11 +76,27 @@ def model_stream_time(bytes_total: int, n_txn: int) -> float:
 
 
 def model_jacobi_gpts(bytes_per_point: float, flops_per_point: float = 5.0,
-                      chips: int = 1) -> float:
-    """Modeled Jacobi throughput (GPt/s) on v5e: min(bandwidth, VPU)."""
-    bw_pts = HBM_BW / max(bytes_per_point, 1e-9)
-    vpu_pts = VPU_FLOPS / flops_per_point
-    return chips * min(bw_pts, vpu_pts) / 1e9
+                      chips: int = 1,
+                      device: str | DeviceModel | None = "tpu_v5e") -> float:
+    """Modeled stencil throughput (GPt/s): min(DRAM bandwidth, vector math).
+
+    ``device`` picks the registry model; the default prices the v5e like
+    the tables always did. Grayskull and the Xeon price with their own
+    DRAM/vector numbers — the paper's crossovers fall out of the registry
+    instead of being retyped per table.
+    """
+    dev = get_device(device)
+    bw_pts = dev.dram_bw / max(bytes_per_point, 1e-9)
+    vec_pts = dev.vector_flops / flops_per_point
+    return chips * min(bw_pts, vec_pts) / 1e9
+
+
+def model_energy_j(npts: int, iters: int, gpts: float, chips: int,
+                   device: str | DeviceModel | None = "tpu_v5e") -> float:
+    """Modeled energy: chips x TDP x modeled wall time (no RAPL/TT-SMI in a
+    dry run — labeled MODELED wherever it is printed)."""
+    seconds = npts * iters / (gpts * 1e9)
+    return chips * get_device(device).tdp_watts * seconds
 
 
 def engine_variant_rows(spec=None, dtype=None, t: int = 8):

@@ -168,6 +168,25 @@ def resolve_axes(mesh, row_axis: str | None, col_axis: str | None):
     return row_axis, col_axis
 
 
+def extended_shard_shape(shape, mesh, spec: StencilSpec, *, t: int = 1,
+                         row_axis: str | None = None,
+                         col_axis: str | None = None) -> tuple[int, int]:
+    """Static local block a sweep sees: shard interior + depth-``t*r`` halo.
+
+    This is the shape per-shard execution plans must be validated against —
+    a policy whose window fits the *global* grid's plan can still overflow
+    a device's fast memory once the exchanged halo band is attached, and
+    vice versa. Single source for ``engine.run_distributed`` and any
+    caller that wants to pre-flight a distributed plan.
+    """
+    row_axis, col_axis = resolve_axes(mesh, row_axis, col_axis)
+    r = spec.radius
+    px = mesh.shape[row_axis] if row_axis else 1
+    py = mesh.shape[col_axis] if col_axis else 1
+    d = 2 * t * r
+    return ((shape[0] - 2 * r) // px + d, (shape[1] - 2 * r) // py + d)
+
+
 def run_sharded(u: jax.Array, spec: StencilSpec, mesh, sweep: Callable, *,
                 iters: int, t: int = 1, row_axis: str | None = None,
                 col_axis: str | None = None) -> jax.Array:

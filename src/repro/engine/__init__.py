@@ -14,9 +14,25 @@ Typical use::
 
     u1 = engine.run(u, laplace_2d_9pt(), policy="auto", iters=100)
 
-Layers: ``plan`` (block/VMEM/temporal-depth planning, cached),
-``policies`` (the Pallas kernels), ``dispatch`` (registry + run/step).
+Every entry point takes ``device=`` (a registry name such as
+``"grayskull_e150"`` or a :class:`~repro.engine.device.DeviceModel`):
+plans are validated against that device's fast-memory budget and the
+``"auto"``/``"tuned"`` policies pick their winner for that device. With no
+device the host backend is detected.
+
+Layers: ``device`` (hardware models + registry), ``plan`` (block/window/
+temporal-depth planning, cached per device), ``policies`` (the Pallas
+kernels), ``dispatch`` (registry + run/step), ``tune`` (measured
+autotuner behind ``policy="tuned"``).
 """
+from repro.engine.device import (  # noqa: F401
+    DeviceModel,
+    available_devices,
+    detect,
+    device_registry,
+    get_device,
+    register_device,
+)
 from repro.engine.plan import (  # noqa: F401
     DEFAULT_BM,
     DEFAULT_T,

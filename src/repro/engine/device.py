@@ -1,0 +1,196 @@
+"""Device models: plan against the hardware you're on, not a constant.
+
+The paper's whole argument is architectural contrast — Grayskull's 1.5 MB
+Tensix SRAM and BF16 math vs. a Xeon's caches and FP32 — so the planner,
+the auto-policy heuristic, the roofline, and the benchmark tables must all
+consume the *same* per-device description instead of three independent
+sets of magic constants (the old ``plan.VMEM_BUDGET_BYTES``, the
+``roofline.V5E`` dict, and the watts baked into ``benchmarks/common``).
+
+A :class:`DeviceModel` is a frozen, hashable value object, so it can ride
+through ``functools.lru_cache`` keys and jit static arguments unchanged.
+Models are registered by name; ``detect()`` maps ``jax.default_backend()``
+to the closest registered model so ``device=None`` everywhere means "the
+hardware this process is actually on".
+
+All numbers are *modeling constants* (vendor peaks / paper-quoted
+figures), not measurements — the measured side lives in
+:mod:`repro.engine.tune`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Everything the planning/model stack needs to know about one chip.
+
+    ``fast_memory_bytes`` is the per-core budget the planner validates
+    kernel windows against (TPU VMEM, Tensix SRAM, GPU shared memory, CPU
+    last-level cache slice). ``peak_flops`` is the per-chip peak at
+    ``preferred_dtype``; ``vector_flops`` is the elementwise (non-matmul)
+    throughput stencil math actually runs at. Bandwidths are bytes/s:
+    ``dram_bw`` per chip, ``interconnect_bw`` per on-board/pod link (ICI,
+    NVLink, PCIe), ``inter_node_bw`` across nodes/pods (DCI, Ethernet).
+    """
+
+    name: str
+    backend: str              # jax.default_backend() value this stands for
+    description: str
+    cores: int                # compute units each owning a fast-memory bank
+    fast_memory_bytes: int
+    preferred_dtype: str
+    peak_flops: float
+    vector_flops: float
+    dram_bw: float
+    interconnect_bw: float
+    inter_node_bw: float
+    tdp_watts: float
+
+    @property
+    def preferred_jax_dtype(self):
+        return jnp.dtype(self.preferred_dtype)
+
+    @property
+    def fast_memory_mib(self) -> float:
+        return self.fast_memory_bytes / 2**20
+
+    def as_roofline_hw(self) -> dict:
+        """The dict shape :func:`repro.roofline.analyze` consumes."""
+        return {
+            "peak_flops": self.peak_flops,
+            "hbm_bw": self.dram_bw,
+            "ici_bw": self.interconnect_bw,
+            "dci_bw": self.inter_node_bw,
+            "tdp_watts": self.tdp_watts,
+        }
+
+    def describe(self) -> str:
+        return (f"{self.name}: {self.cores} core(s) x "
+                f"{self.fast_memory_mib:.2f} MiB fast mem, "
+                f"{self.preferred_dtype}, peak {self.peak_flops / 1e12:.0f} "
+                f"TFLOP/s, DRAM {self.dram_bw / 1e9:.0f} GB/s, "
+                f"TDP {self.tdp_watts:.0f} W")
+
+
+_REGISTRY: dict[str, DeviceModel] = {}
+
+
+def register_device(model: DeviceModel) -> DeviceModel:
+    if model.name in _REGISTRY:
+        raise ValueError(f"device {model.name!r} already registered")
+    _REGISTRY[model.name] = model
+    return model
+
+
+def available_devices() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def device_registry() -> tuple[DeviceModel, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def get_device(device: str | DeviceModel | None = None) -> DeviceModel:
+    """Resolve a registry name (or pass a model through); None -> detect()."""
+    if device is None:
+        return detect()
+    if isinstance(device, DeviceModel):
+        return device
+    try:
+        return _REGISTRY[device]
+    except KeyError:
+        raise ValueError(
+            f"unknown device model {device!r}; registered: "
+            f"{available_devices()}") from None
+
+
+def detect() -> DeviceModel:
+    """The registered model closest to ``jax.default_backend()``.
+
+    The match is by the model's ``backend`` tag (first registered wins), so
+    a TPU process plans against VMEM, a GPU process against shared memory,
+    and a CPU process against the reference Xeon's cache budget. Unmatched
+    backends fall back to ``cpu_ref`` — the conservative choice.
+    """
+    backend = jax.default_backend()
+    for model in _REGISTRY.values():
+        if model.backend == backend:
+            return model
+    return _REGISTRY["cpu_ref"]
+
+
+# ---------------------------------------------------------------------------
+# The registry. Order matters only for detect()'s first-match rule.
+# ---------------------------------------------------------------------------
+
+TPU_V5E = register_device(DeviceModel(
+    name="tpu_v5e",
+    backend="tpu",
+    description="TPU v5e chip (the repo's reproduction substrate)",
+    cores=1,
+    # Conservative per-kernel VMEM window budget (the chip has far more;
+    # this is the planning headroom the kernels were validated under, and
+    # the legacy plan.VMEM_BUDGET_BYTES value).
+    fast_memory_bytes=16 * 2**20,
+    preferred_dtype="bfloat16",
+    peak_flops=197e12,         # bf16 MXU peak
+    vector_flops=197e12 / 50,  # VPU elementwise planning number
+    dram_bw=819e9,
+    interconnect_bw=50e9,      # ICI per link, one direction
+    inter_node_bw=6.25e9,      # DCI (assumed 50 Gbit)
+    tdp_watts=215.0,
+))
+
+GRAYSKULL_E150 = register_device(DeviceModel(
+    name="grayskull_e150",
+    backend="tt",
+    description="Tenstorrent Grayskull e150 (the paper's accelerator)",
+    cores=108,                 # Tensix cores the paper could use
+    fast_memory_bytes=int(1.5 * 2**20),  # per-core Tensix SRAM
+    preferred_dtype="bfloat16",
+    peak_flops=92e12,          # vendor-quoted BF16 matmul peak
+    # Paper Table II compute-only: 1.387 GPt/s/core x 5 flops/pt -> ~7
+    # GFLOP/s per core of non-matmul stencil math, x108 cores.
+    vector_flops=0.75e12,
+    dram_bw=118.4e9,           # 8 ch LPDDR4
+    interconnect_bw=32e9,      # PCIe gen4 x16 to the host
+    # The paper's cards cannot exchange halos directly (§VII); anything
+    # inter-card rides host PCIe+memory, modeled as a thin pipe.
+    inter_node_bw=1.25e9,
+    tdp_watts=200.0,
+))
+
+GPU_SM90 = register_device(DeviceModel(
+    name="gpu_sm90",
+    backend="gpu",
+    description="H100-class SM90 GPU",
+    cores=132,                 # SMs
+    fast_memory_bytes=227 * 2**10,  # usable shared memory per SM
+    preferred_dtype="bfloat16",
+    peak_flops=989e12,         # bf16 tensor-core dense
+    vector_flops=67e12,        # fp32 CUDA-core throughput
+    dram_bw=3.35e12,
+    interconnect_bw=450e9,     # NVLink per direction
+    inter_node_bw=50e9,        # 400 Gbit NIC
+    tdp_watts=700.0,
+))
+
+CPU_REF = register_device(DeviceModel(
+    name="cpu_ref",
+    backend="cpu",
+    description="24-core Xeon (the paper's CPU baseline class)",
+    cores=24,
+    fast_memory_bytes=32 * 2**20,  # shared L3
+    preferred_dtype="float32",
+    peak_flops=1.8e12,         # 24 cores x AVX-512 fp32
+    vector_flops=1.8e12,       # the vector units *are* the peak on CPU
+    dram_bw=128e9,             # 6-channel DDR4
+    interconnect_bw=41.6e9,    # UPI
+    inter_node_bw=12.5e9,      # 100 Gbit NIC
+    tdp_watts=205.0,
+))

@@ -3,8 +3,10 @@
 Every execution policy registers itself here with enough metadata for the
 benchmark tables to enumerate variants (name, paper provenance, modeled
 bytes/point) — no caller keeps a hand-written kernel list. ``run`` is the
-public entry point: pick a policy (or ``"auto"``), advance any 2-D
-``StencilSpec`` any number of sweeps.
+public entry point: pick a policy (``"auto"`` consults the device-aware
+heuristic, ``"tuned"`` the measured cache in :mod:`repro.engine.tune`),
+advance any 2-D ``StencilSpec`` any number of sweeps on any registered
+:class:`~repro.engine.device.DeviceModel`.
 """
 from __future__ import annotations
 
@@ -16,6 +18,7 @@ import jax
 
 from repro.core.stencil import StencilSpec, jacobi_2d_5pt
 from repro.engine import policies as P
+from repro.engine.device import DeviceModel, get_device
 from repro.engine.plan import DEFAULT_T, PlanError, plan_for
 
 #: Non-fused policy used for the leftover sweeps when ``iters`` is not a
@@ -109,44 +112,66 @@ def _on_tpu() -> bool:
 
 
 def resolve_auto(shape, dtype, spec: StencilSpec, *, iters: int = 1,
-                 t: int | None = None) -> str:
-    """Pick a policy from a simple VMEM/traffic heuristic.
+                 t: int | None = None,
+                 device: str | DeviceModel | None = None) -> str:
+    """Pick a policy from a fast-memory/traffic heuristic for ``device``.
 
     Temporal blocking wins whenever several sweeps can amortize one HBM
-    round-trip and its (t*r)-deep halo window passes plan validation; with a
-    multi-block grid the double-buffered mover hides DMA latency; a single
-    resident block leaves nothing to prefetch, so plain rowchunk.
+    round-trip and its (t*r)-deep halo window passes plan validation *on
+    that device*; with a multi-block grid the double-buffered mover hides
+    DMA latency; a single resident block leaves nothing to prefetch, so
+    plain rowchunk. The crossover points therefore move with the device:
+    a window that fits 16 MiB of v5e VMEM can overflow the 1.5 MiB Tensix
+    SRAM of ``grayskull_e150``, demoting temporal -> dbuf -> shifted.
     """
     t_eff = t if t is not None else min(DEFAULT_T, max(iters, 1))
     if iters >= 2 and t_eff >= 2:
         try:
-            plan_for(shape, dtype, spec, "temporal", t=min(t_eff, iters))
+            plan_for(shape, dtype, spec, "temporal", t=min(t_eff, iters),
+                     device=device)
             return "temporal"
         except PlanError:
             pass
     try:
-        plan = plan_for(shape, dtype, spec, "rowchunk")
+        plan = plan_for(shape, dtype, spec, "rowchunk", device=device)
     except PlanError:
         return "shifted"  # window never fits; stream per-tap blocks instead
     return "dbuf" if plan.nblocks >= 2 else "rowchunk"
 
 
+def _resolve_device_name(device: str | DeviceModel | None
+                         ) -> str | DeviceModel | None:
+    """Normalize to a hashable static value for the jitted policy wrappers.
+
+    Registry names are validated and stay names; DeviceModel instances pass
+    through whole (frozen dataclasses hash fine, and an *unregistered*
+    model has no name the planner could resolve later); None stays None so
+    the planner detects the host backend.
+    """
+    if device is None or isinstance(device, DeviceModel):
+        return device
+    return get_device(device).name
+
+
 def step(u: jax.Array, spec: StencilSpec | None = None, *,
          policy: str = "auto", bm: int | None = None, t: int | None = None,
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None,
+         device: str | DeviceModel | None = None) -> jax.Array:
     """One kernel invocation: a single sweep, or ``t`` fused sweeps for the
     temporal policy."""
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
         interpret = not _on_tpu()
-    if policy == "auto":
-        # A single step must advance exactly one sweep, so auto never picks
-        # a fused policy here (run() with iters does).
-        policy = resolve_auto(u.shape, u.dtype, spec, iters=1, t=1)
+    device = _resolve_device_name(device)
+    if policy in ("auto", "tuned"):
+        # A single step must advance exactly one sweep, so auto/tuned never
+        # pick a fused policy here (run() with iters does).
+        policy = resolve_auto(u.shape, u.dtype, spec, iters=1, t=1,
+                              device=device)
     p = get_policy(policy)
     if p.fused:
-        return p.fn(u, spec, bm=bm, t=t, interpret=interpret)
-    return p.fn(u, spec, bm=bm, interpret=interpret)
+        return p.fn(u, spec, bm=bm, t=t, interpret=interpret, device=device)
+    return p.fn(u, spec, bm=bm, interpret=interpret, device=device)
 
 
 def _scan_steps(u: jax.Array, fn: Callable, n: int) -> jax.Array:
@@ -161,19 +186,29 @@ def _scan_steps(u: jax.Array, fn: Callable, n: int) -> jax.Array:
 def run(u: jax.Array, spec: StencilSpec | None = None, *,
         policy: str = "auto", iters: int = 1, bm: int | None = None,
         t: int | None = None, interpret: bool | None = None,
+        device: str | DeviceModel | None = None,
         remainder_policy: str = DEFAULT_REMAINDER_POLICY) -> jax.Array:
     """Advance a ringed grid by exactly ``iters`` sweeps of ``spec``.
 
-    ``policy`` is a registry name or ``"auto"``. For the temporal policy,
-    full ``t``-deep fused blocks cover ``iters // t`` round-trips and the
-    leftover ``iters % t`` sweeps run under ``remainder_policy`` (a
-    non-fused registry policy), so any iteration count is valid.
+    ``policy`` is a registry name, ``"auto"`` (device-aware heuristic), or
+    ``"tuned"`` (measured winner from the autotune cache). ``device`` is a
+    registry name or :class:`DeviceModel`; plans are validated against its
+    fast-memory budget (None = the detected host backend). For the temporal
+    policy, full ``t``-deep fused blocks cover ``iters // t`` round-trips
+    and the leftover ``iters % t`` sweeps run under ``remainder_policy``
+    (a non-fused registry policy), so any iteration count is valid.
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
         interpret = not _on_tpu()
+    device = _resolve_device_name(device)
     if policy == "auto":
-        policy = resolve_auto(u.shape, u.dtype, spec, iters=iters, t=t)
+        policy = resolve_auto(u.shape, u.dtype, spec, iters=iters, t=t,
+                              device=device)
+    elif policy == "tuned":
+        from repro.engine import tune  # deferred: tune dispatches back here
+        policy = tune.best_policy(u.shape, u.dtype, spec, iters=iters, t=t,
+                                  bm=bm, interpret=interpret, device=device)
     p = get_policy(policy)
 
     if p.fused:
@@ -182,15 +217,17 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
         t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
         nfull, rem = divmod(iters, t_eff)
         u = _scan_steps(u, functools.partial(
-            p.fn, spec=spec, bm=bm, t=t_eff, interpret=interpret), nfull)
+            p.fn, spec=spec, bm=bm, t=t_eff, interpret=interpret,
+            device=device), nfull)
         if rem:
             rp = get_policy(remainder_policy)
             if rp.fused:
                 raise ValueError(
                     f"remainder_policy {remainder_policy!r} must be non-fused")
             u = _scan_steps(u, functools.partial(
-                rp.fn, spec=spec, bm=bm, interpret=interpret), rem)
+                rp.fn, spec=spec, bm=bm, interpret=interpret,
+                device=device), rem)
         return u
 
     return _scan_steps(u, functools.partial(
-        p.fn, spec=spec, bm=bm, interpret=interpret), iters)
+        p.fn, spec=spec, bm=bm, interpret=interpret, device=device), iters)

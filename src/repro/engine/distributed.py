@@ -7,6 +7,13 @@ runs the *local* computation through the same policy registry ``engine.run``
 uses — so the paper's §VII multi-card scaling composes with every kernel
 generation instead of the hard-coded 5-point Jacobi.
 
+Per-shard plans are validated against the target
+:class:`~repro.engine.device.DeviceModel` *before* anything is sharded: the
+static local block (shard interior + exchanged halo, from
+``dist.stencil.extended_shard_shape``) must fit the device's fast-memory
+budget, so an over-deep fusion depth on a small-SRAM device fails fast with
+the device's numbers in the message instead of mid-trace inside shard_map.
+
 The local sweep obeys the registry contract (one sweep per call, f32 tap
 accumulation in fixed tap order), so the distributed result is bit-identical
 to the single-device ``engine.run`` oracle in fp32 for face/row-neighbour
@@ -18,54 +25,71 @@ from __future__ import annotations
 import jax
 
 from repro.core.stencil import StencilSpec, apply_stencil, jacobi_2d_5pt
-from repro.engine.dispatch import _on_tpu, get_policy, resolve_auto
+from repro.engine.device import DeviceModel
+from repro.engine.dispatch import (_on_tpu, _resolve_device_name, get_policy,
+                                   resolve_auto)
+from repro.engine.plan import plan_for
 
 
 def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
-                    dtype, bm: int | None = None,
-                    interpret: bool = False):
+                    dtype, bm: int | None = None, interpret: bool = False,
+                    device: str | None = None):
     """Resolve a policy name to a single-sweep callable on extended shards.
 
     ``"reference"`` selects the pure-jnp oracle; ``"auto"`` consults the
-    planner against the (static) extended shard shape.
+    planner and ``"tuned"`` the measured autotune cache, both against the
+    (static) extended shard shape on ``device`` — the shard, not the global
+    grid, is what the local kernel actually runs on. For registry policies
+    the shard plan is resolved eagerly here, surfacing device-budget
+    violations before shard_map tracing starts.
     """
     if policy == "reference":
         return lambda ext: apply_stencil(ext, spec)
     if policy == "auto":
-        policy = resolve_auto(shard_shape, dtype, spec, iters=1, t=1)
+        policy = resolve_auto(shard_shape, dtype, spec, iters=1, t=1,
+                              device=device)
+    elif policy == "tuned":
+        from repro.engine import tune  # deferred: tune dispatches back here
+        policy = tune.best_policy(shard_shape, dtype, spec, iters=1, t=1,
+                                  bm=bm, interpret=interpret, device=device)
     p = get_policy(policy)
+    plan_for(shard_shape, dtype, spec, policy, bm=bm,
+             t=1 if p.fused else None, device=device)
     if p.fused:
-        return lambda ext: p.fn(ext, spec, bm=bm, t=1, interpret=interpret)
-    return lambda ext: p.fn(ext, spec, bm=bm, interpret=interpret)
+        return lambda ext: p.fn(ext, spec, bm=bm, t=1, interpret=interpret,
+                                device=device)
+    return lambda ext: p.fn(ext, spec, bm=bm, interpret=interpret,
+                            device=device)
 
 
 def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
                     mesh, policy: str = "auto", iters: int = 1, t: int = 1,
                     bm: int | None = None, row_axis: str | None = None,
                     col_axis: str | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    device: str | DeviceModel | None = None) -> jax.Array:
     """Advance a ringed grid by ``iters`` sweeps of ``spec`` over ``mesh``.
 
     Same contract and return as ``engine.run`` (full grid, ring copied
     through), decomposed rows x cols over ``(row_axis, col_axis)`` (defaults:
     the mesh's first/second axes). ``t`` sweeps run per halo exchange
     (depth-``t*r`` halos — the communication-avoiding schedule); ``policy``
-    is any registry name, ``"reference"`` (pure jnp), or ``"auto"``.
+    is any registry name, ``"reference"`` (pure jnp), ``"auto"``, or
+    ``"tuned"``; ``device`` selects the device model each shard's plan is
+    validated against (None = the detected host backend).
     """
     from repro.dist import stencil as dstencil
 
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
         interpret = not _on_tpu()
+    device = _resolve_device_name(device)
     row_axis, col_axis = dstencil.resolve_axes(mesh, row_axis, col_axis)
-    r = spec.radius
-    px = mesh.shape[row_axis] if row_axis else 1
-    py = mesh.shape[col_axis] if col_axis else 1
     t_eff = max(1, min(t, iters))
-    # Static local shape the planner sees: shard interior + exchanged halo.
-    shard_shape = ((u.shape[0] - 2 * r) // px + 2 * t_eff * r,
-                   (u.shape[1] - 2 * r) // py + 2 * t_eff * r)
+    shard_shape = dstencil.extended_shard_shape(
+        u.shape, mesh, spec, t=t_eff, row_axis=row_axis, col_axis=col_axis)
     sweep = local_sweep_for(policy, spec, shard_shape=shard_shape,
-                            dtype=u.dtype, bm=bm, interpret=interpret)
+                            dtype=u.dtype, bm=bm, interpret=interpret,
+                            device=device)
     return dstencil.run_sharded(u, spec, mesh, sweep, iters=iters, t=t_eff,
                                 row_axis=row_axis, col_axis=col_axis)

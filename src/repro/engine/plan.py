@@ -1,13 +1,16 @@
 """Execution planning for the stencil engine.
 
 A *plan* is everything that must be decided before a policy kernel can be
-launched: the row-block size ``bm`` (the grid granularity), the VMEM window
-that block implies, the temporal fusion depth, and whether the whole thing
-fits the per-core VMEM budget. Plans are pure functions of static arguments
-(shape, dtype, spec, policy, requested knobs), so they are memoized in an
-in-process cache — re-dispatching the same problem costs a dict lookup, not
-a re-derivation (and, because the policy wrappers are jitted on the same
-static keys, not a retrace either).
+launched: the row-block size ``bm`` (the grid granularity), the fast-memory
+window that block implies, the temporal fusion depth, and whether the whole
+thing fits the *device's* per-core fast-memory budget (TPU VMEM, Tensix
+SRAM, GPU shared memory — see :mod:`repro.engine.device`; the budget used
+to be a single hard-coded 16 MiB constant). Plans are pure functions of
+static arguments (shape, dtype, spec, policy, device, requested knobs), so
+they are memoized in an in-process cache — re-dispatching the same problem
+costs a dict lookup, not a re-derivation (and, because the policy wrappers
+are jitted on the same static keys, not a retrace either). Plans for the
+same problem on different devices are distinct cache entries.
 
 ``pick_bm`` lives here as the single shared copy; it used to be duplicated
 verbatim in ``kernels/jacobi.py`` and ``kernels/stencil_general.py``.
@@ -16,30 +19,40 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax.numpy as jnp
 
 from repro.core.stencil import StencilSpec
+from repro.engine.device import DeviceModel, get_device
 
 # Knob defaults shared by every policy.
 DEFAULT_BM = 256   # interior rows per block
 DEFAULT_T = 8      # temporal fusion depth (sweeps per HBM round-trip)
 
-# Per-core fast-memory budget the planner validates against. 16 MB is the
-# TPU VMEM size; the Grayskull Tensix SRAM (1.5 MB) would use the same
-# machinery with a smaller constant.
-VMEM_BUDGET_BYTES = 16 * 1024 * 1024
-
 
 class PlanError(ValueError):
-    """A (shape, dtype, spec, policy) combination that cannot be planned."""
+    """A (shape, dtype, spec, policy, device) combination that cannot be
+    planned."""
 
 
 def pick_bm(h_int: int, bm: int) -> int:
-    """Largest divisor of ``h_int`` that is <= ``bm`` (keeps the grid exact)."""
-    bm = min(bm, h_int)
+    """Largest divisor of ``h_int`` that is <= ``bm`` (keeps the grid exact).
+
+    Warns when the request degrades all the way to ``bm=1`` (e.g. a prime
+    interior height like 1021 rows turns into 1021 one-row grid steps) —
+    that is always a performance bug the caller should hear about.
+    """
+    req = min(bm, h_int)
+    bm = req
     while h_int % bm:
         bm -= 1
+    if bm == 1 and req > 1:
+        warnings.warn(
+            f"pick_bm: interior height {h_int} has no divisor <= {req}; "
+            f"realized bm=1 (one grid step per row — expect poor DMA "
+            f"efficiency; pad the grid or pick a height with small factors)",
+            stacklevel=2)
     return bm
 
 
@@ -49,9 +62,10 @@ class ExecutionPlan:
 
     shape/dtype describe the ringed grid (boundary included); ``bm`` is the
     number of interior rows each grid step produces; ``window_rows`` is the
-    height of the VMEM-resident input window that block needs (bm + halo);
-    ``t`` is the number of sweeps fused per HBM round-trip (1 unless the
-    policy is temporal).
+    height of the fast-memory-resident input window that block needs
+    (bm + halo); ``t`` is the number of sweeps fused per HBM round-trip
+    (1 unless the policy is temporal); ``device`` is the model whose budget
+    validated the plan.
     """
 
     policy: str
@@ -62,6 +76,7 @@ class ExecutionPlan:
     t: int
     window_rows: int
     vmem_bytes: int
+    device: DeviceModel
 
     @property
     def radius(self) -> int:
@@ -84,12 +99,13 @@ class ExecutionPlan:
         return (f"{self.policy}: grid={self.shape} dtype={self.dtype} "
                 f"taps={self.spec.taps} r={self.radius} bm={self.bm} "
                 f"t={self.t} window={self.window_rows}x{self.shape[1]} "
-                f"vmem={self.vmem_bytes / 1024:.0f}KiB blocks={self.nblocks}")
+                f"vmem={self.vmem_bytes / 1024:.0f}KiB blocks={self.nblocks} "
+                f"device={self.device.name}")
 
 
 def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
                      bm: int, t: int) -> tuple[int, int]:
-    """VMEM window height and total scratch/operand footprint estimate."""
+    """Fast-memory window height and total scratch/operand footprint."""
     h, w = shape
     r = spec.radius
     wi = w - 2 * r
@@ -117,7 +133,8 @@ def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
 
 @functools.lru_cache(maxsize=1024)
 def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
-                 policy: str, bm_req: int, t: int) -> ExecutionPlan:
+                 policy: str, bm_req: int, t: int,
+                 device: DeviceModel) -> ExecutionPlan:
     h, w = shape
     r = spec.radius
     if spec.ndim != 2:
@@ -131,27 +148,31 @@ def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
     bm = pick_bm(hi, bm_req)
     win, vmem = _window_and_vmem(policy, shape, jnp.dtype(dtype).itemsize,
                                  spec, bm, t)
-    if vmem > VMEM_BUDGET_BYTES:
+    if vmem > device.fast_memory_bytes:
         raise PlanError(
-            f"policy {policy!r} needs ~{vmem / 2**20:.1f} MiB of VMEM for "
-            f"grid {shape} (bm={bm}, t={t}); budget is "
-            f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB — lower bm or t")
+            f"policy {policy!r} needs ~{vmem / 2**20:.2f} MiB of fast memory "
+            f"for grid {shape} (bm={bm}, t={t}); {device.name} has "
+            f"{device.fast_memory_mib:.2f} MiB per core — lower bm or t, "
+            f"or plan for a device with more fast memory")
     return ExecutionPlan(policy=policy, shape=shape, dtype=dtype, spec=spec,
-                         bm=bm, t=t, window_rows=win, vmem_bytes=vmem)
+                         bm=bm, t=t, window_rows=win, vmem_bytes=vmem,
+                         device=device)
 
 
 def plan_for(shape, dtype, spec: StencilSpec, policy: str, *,
-             bm: int | None = None, t: int | None = None) -> ExecutionPlan:
+             bm: int | None = None, t: int | None = None,
+             device: str | DeviceModel | None = None) -> ExecutionPlan:
     """Resolve (and cache) an :class:`ExecutionPlan` for static arguments.
 
     ``bm``/``t`` are requests; the plan holds the realized values (``bm`` is
     snapped to the largest interior-row divisor, ``t`` is forced to 1 for
-    non-temporal policies).
+    non-temporal policies). ``device`` is a registry name or model; None
+    plans against the detected host backend (``device.detect()``).
     """
     t_eff = (t if t is not None else DEFAULT_T) if policy == "temporal" else 1
     return _plan_cached(tuple(int(s) for s in shape), jnp.dtype(dtype).name,
                         spec, policy, int(bm if bm is not None else DEFAULT_BM),
-                        int(t_eff))
+                        int(t_eff), get_device(device))
 
 
 def plan_cache_info():

@@ -31,7 +31,10 @@ any 2-D :class:`~repro.core.stencil.StencilSpec` (any radius, any tap set):
 All grids are "ringed": shape (H, W) with a fixed Dirichlet boundary ring of
 width ``spec.radius``; only the interior is updated. Kernels accumulate in
 f32 and store in the input dtype. Launch parameters come from
-``engine.plan.plan_for`` (cached), never ad hoc.
+``engine.plan.plan_for`` (cached), never ad hoc; every entry point takes a
+static ``device`` (registry name or frozen DeviceModel) so the plan is
+validated against the fast-memory budget of the hardware being planned
+for, not a constant.
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import StencilSpec
+from repro.engine.device import DeviceModel  # noqa: F401  (annotations)
 from repro.engine.plan import plan_for
 
 
@@ -74,11 +78,13 @@ def _shifted_kernel(*refs, weights):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bm", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "interpret", "device"))
 def stencil_shifted(u: jax.Array, spec: StencilSpec, *, bm: int | None = None,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False,
+                    device: "str | DeviceModel | None" = None) -> jax.Array:
     """One sweep via one materialized shifted copy per tap (baseline)."""
-    plan = plan_for(u.shape, u.dtype, spec, "shifted", bm=bm)
+    plan = plan_for(u.shape, u.dtype, spec, "shifted", bm=bm, device=device)
     r = plan.radius
     h, w = u.shape
     hi, wi = plan.interior_shape
@@ -116,11 +122,13 @@ def _rowchunk_kernel(u_hbm, o_ref, scratch, sem, *, r: int, offsets, weights):
                           weights).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bm", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "interpret", "device"))
 def stencil_rowchunk(u: jax.Array, spec: StencilSpec, *, bm: int | None = None,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False,
+                     device: "str | DeviceModel | None" = None) -> jax.Array:
     """One sweep via contiguous row-chunk loads + in-VMEM shifts."""
-    plan = plan_for(u.shape, u.dtype, spec, "rowchunk", bm=bm)
+    plan = plan_for(u.shape, u.dtype, spec, "rowchunk", bm=bm, device=device)
     r = plan.radius
     w = u.shape[1]
     hi, wi = plan.interior_shape
@@ -190,11 +198,13 @@ def _dbuf_kernel(u_hbm, o_hbm, in_scr, out_scr, in_sem, out_sem,
             out_sem.at[slot]).wait()
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bm", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "interpret", "device"))
 def stencil_dbuf(u: jax.Array, spec: StencilSpec, *, bm: int | None = None,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False,
+                 device: "str | DeviceModel | None" = None) -> jax.Array:
     """One sweep with an explicit double-buffered load/compute/store loop."""
-    plan = plan_for(u.shape, u.dtype, spec, "dbuf", bm=bm)
+    plan = plan_for(u.shape, u.dtype, spec, "dbuf", bm=bm, device=device)
     r = plan.radius
     w = u.shape[1]
     hi, wi = plan.interior_shape
@@ -257,12 +267,14 @@ def _temporal_kernel(u_hbm, o_hbm, scratch, out_scr, in_sem, out_sem,
     wcp.wait()
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "t", "bm", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "t", "bm", "interpret", "device"))
 def stencil_temporal(u: jax.Array, spec: StencilSpec, *, t: int | None = None,
-                     bm: int | None = None,
-                     interpret: bool = False) -> jax.Array:
+                     bm: int | None = None, interpret: bool = False,
+                     device: "str | DeviceModel | None" = None) -> jax.Array:
     """Advance the grid by exactly ``t`` sweeps in one HBM round-trip."""
-    plan = plan_for(u.shape, u.dtype, spec, "temporal", bm=bm, t=t)
+    plan = plan_for(u.shape, u.dtype, spec, "temporal", bm=bm, t=t,
+                    device=device)
     r = plan.radius
     h, w = u.shape
     out = pl.pallas_call(

@@ -1,0 +1,198 @@
+"""Measured autotuner: pick the policy by timing it, then never again.
+
+``resolve_auto`` is a model; this module is the measurement. For a given
+``(shape, dtype, spec, device)`` cell it times every registry policy whose
+plan validates on that device (one warmup + a few timed reps of the jitted
+single-call kernel, normalized per sweep for fused policies), picks the
+fastest, and persists the winner to a JSON cache — the same
+measure-and-cache discipline ``launch/tuning.py`` applies to model cells,
+brought down to the stencil engine. The second request for the same cell
+is a dict lookup; across processes it is a file read.
+
+The cache file maps ``key -> {"policy", "us_per_sweep", "skipped"}``.
+Keys fold in everything that changes the winner: grid shape, dtype, the
+spec's taps/weights, the device model, the fusion depth bucket, the bm
+request, and whether the measurement ran in interpret mode (interpret
+walltimes bear no relation to compiled ones, so the two worlds must
+never share winners). Entries are keyed by *device model*, not host
+backend — a CPU process tuning for ``grayskull_e150`` produces
+e150-keyed entries (the measurements are still taken on this host; like
+every interpret-mode number in this repo they are relative, but the
+*candidate set* is the device's own, because planning gates candidates
+by its budget). Each cache file is loaded and saved as its own unit —
+entries never migrate between files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import StencilSpec
+from repro.engine.device import DeviceModel, get_device
+from repro.engine.dispatch import get_policy, registry
+from repro.engine.plan import DEFAULT_T, PlanError, plan_for
+
+#: Default on-disk location; override per call or via $REPRO_TUNE_CACHE.
+DEFAULT_CACHE_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "engine_tune.json")
+
+# One in-memory dict per cache file, loaded lazily; kept separate so
+# saving one file never writes another file's entries into it.
+_caches: dict[str, dict[str, dict]] = {}
+_loaded_paths: set[str] = set()
+
+#: Number of measurement passes taken since import (test/diagnostic hook:
+#: a cache hit must not bump this).
+measure_count = 0
+
+
+def _cache_path(cache_path: str | None) -> str:
+    return cache_path or os.environ.get("REPRO_TUNE_CACHE",
+                                        DEFAULT_CACHE_PATH)
+
+
+def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
+             t: int | None, bm: int | None, interpret: bool = True) -> str:
+    """Stable cache key for one autotune cell."""
+    return "|".join([
+        "x".join(str(int(s)) for s in shape),
+        jnp.dtype(dtype).name,
+        f"taps={spec.offsets}w={spec.weights}",
+        device.name,
+        f"t={t if t is not None else DEFAULT_T}",
+        f"bm={bm if bm is not None else 'auto'}",
+        f"interpret={bool(interpret)}",
+    ])
+
+
+def _cache_for(path: str) -> dict[str, dict]:
+    """This file's in-memory view, seeded from disk once per path."""
+    cache = _caches.setdefault(path, {})
+    if path not in _loaded_paths:
+        _loaded_paths.add(path)
+        try:
+            with open(path) as f:
+                on_disk = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            on_disk = {}
+        for k, v in on_disk.items():
+            cache.setdefault(k, v)
+    return cache
+
+
+def _save(path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(_caches.get(path, {}), f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear(*, memory_only: bool = True) -> None:
+    """Drop the in-memory caches (tests); on-disk files are left alone."""
+    _caches.clear()
+    _loaded_paths.clear()
+    if not memory_only:
+        path = _cache_path(None)
+        if os.path.exists(path):
+            os.remove(path)
+
+
+def _time_policy(u, spec, name: str, *, bm, t, interpret: bool,
+                 device: DeviceModel, reps: int = 3) -> float:
+    """Median seconds per *sweep* of one jitted policy call."""
+    p = get_policy(name)
+    if p.fused:
+        fn = jax.jit(lambda v: p.fn(v, spec, bm=bm, t=t, interpret=interpret,
+                                    device=device))
+        sweeps = t
+    else:
+        fn = jax.jit(lambda v: p.fn(v, spec, bm=bm, interpret=interpret,
+                                    device=device))
+        sweeps = 1
+    jax.block_until_ready(fn(u))  # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(u))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) / sweeps
+
+
+def measure(shape, dtype, spec: StencilSpec, *, t: int | None = None,
+            bm: int | None = None, interpret: bool = True,
+            device: str | DeviceModel | None = None) -> dict:
+    """Time every policy that plans on ``device``; return the record.
+
+    Candidates whose plan fails validation (budget, shape) are skipped —
+    that is the device model doing its job, not an error. Fused candidates
+    run at the effective depth ``t`` and are charged per sweep.
+    """
+    global measure_count
+    measure_count += 1
+    dev = get_device(device)
+    t_eff = t if t is not None else DEFAULT_T
+    u = jnp.zeros(tuple(int(s) for s in shape), jnp.dtype(dtype))
+    timings: dict[str, float] = {}
+    skipped: dict[str, str] = {}
+    for p in registry():
+        kw_t = t_eff if p.fused else None
+        try:
+            plan_for(shape, dtype, spec, p.name, bm=bm, t=kw_t, device=dev)
+        except PlanError as e:
+            skipped[p.name] = str(e)
+            continue
+        # the model object rides through whole so unregistered DeviceModel
+        # instances work identically to registry names
+        timings[p.name] = _time_policy(u, spec, p.name, bm=bm, t=kw_t,
+                                       interpret=interpret, device=dev)
+    if not timings:
+        raise PlanError(
+            f"no policy plans for grid {tuple(shape)} ({jnp.dtype(dtype).name},"
+            f" {spec.taps} taps) on {dev.name}: "
+            + "; ".join(f"{k}: {v}" for k, v in skipped.items()))
+    best = min(timings, key=timings.get)
+    return {
+        "policy": best,
+        "us_per_sweep": {k: round(v * 1e6, 3) for k, v in timings.items()},
+        "skipped": sorted(skipped),
+        "device": dev.name,
+    }
+
+
+def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
+                t: int | None = None, bm: int | None = None,
+                interpret: bool = True,
+                device: str | DeviceModel | None = None,
+                cache_path: str | None = None) -> str:
+    """The measured-fastest policy for this cell; measured at most once.
+
+    Lookup order: in-memory cache -> JSON file -> measure (and persist).
+    Fused winners are only eligible when ``iters`` can amortize them, so a
+    single-sweep call re-buckets to ``t=1`` (matching ``run``'s remainder
+    semantics) rather than inheriting a t=8 winner it cannot run.
+    """
+    dev = get_device(device)
+    t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
+    key = tune_key(shape, dtype, spec, dev, t=t_eff, bm=bm,
+                   interpret=interpret)
+    path = _cache_path(cache_path)
+    cache = _cache_for(path)
+    rec = cache.get(key)
+    if rec is None:
+        rec = measure(shape, dtype, spec, t=t_eff, bm=bm,
+                      interpret=interpret, device=dev)
+        cache[key] = rec
+        _save(path)
+    return rec["policy"]
+
+
+def cache_info() -> dict:
+    """Diagnostics: entries resident in memory and measurements taken."""
+    return {"entries": sum(len(c) for c in _caches.values()),
+            "measure_count": measure_count}

@@ -115,7 +115,8 @@ def lower_cell(arch: str, shape: str, mesh, multi_pod: bool):
     return lowered, mf, knobs
 
 
-def run_cell(arch: str, shape: str, mesh_name: str, outdir: str) -> dict:
+def run_cell(arch: str, shape: str, mesh_name: str, outdir: str,
+             device_model: str = "tpu_v5e") -> dict:
     multi_pod = mesh_name == "multipod"
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
@@ -123,7 +124,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, outdir: str) -> dict:
     cfg = configs.get_config(arch)
     ok, why = cell_supported(cfg, shape)
     rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
-                 "n_devices": n_dev}
+                 "n_devices": n_dev, "device_model": device_model}
     if not ok:
         rec.update(status="skipped", reason=why)
         return rec
@@ -134,7 +135,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, outdir: str) -> dict:
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         rl = roofline.analyze(compiled, n_dev, model_flops,
-                              pod_size=pod_size)
+                              pod_size=pod_size, hw=device_model)
         mem = roofline.memory_per_device(compiled)
     rec.update(status="ok", lower_s=round(t_lower, 1),
                compile_s=round(t_compile, 1),
@@ -148,6 +149,9 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--device-model", default="tpu_v5e",
+                    help="device registry name whose roofline constants "
+                         "price the compiled cells (repro.engine.device)")
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -167,7 +171,8 @@ def main():
                     print(f"[cached ] {mesh_name:8s} {arch:22s} {shape}")
                     continue
                 try:
-                    rec = run_cell(arch, shape, mesh_name, args.outdir)
+                    rec = run_cell(arch, shape, mesh_name, args.outdir,
+                                   device_model=args.device_model)
                 except Exception as e:
                     failures += 1
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_name,

@@ -27,12 +27,17 @@ def main():
     ap.add_argument("--kernel", default="ref",
                     choices=["ref", "v0", "v1", "v1db", "v2",
                              "reference", "shifted", "rowchunk", "dbuf",
-                             "temporal", "auto"],
-                    help="engine policy name (legacy v* tags still accepted)")
+                             "temporal", "auto", "tuned"],
+                    help="engine policy name (legacy v* tags still accepted; "
+                         "'tuned' measures once and caches the winner)")
     ap.add_argument("--temporal", type=int, default=8,
                     help="temporal-policy fusion depth")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
+    ap.add_argument("--device-model", default=None,
+                    help="device registry name to plan against (e.g. "
+                         "tpu_v5e, grayskull_e150); default: detect the "
+                         "host backend")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--depth", type=int, default=1,
                     help="halo exchange depth (sweeps per exchange)")
@@ -43,6 +48,11 @@ def main():
     from repro import engine
     from repro.core.stencil import make_laplace_problem
     from repro.kernels.ops import VERSION_TO_POLICY
+
+    device = engine.get_device(args.device_model).name \
+        if args.device_model else None
+    if device:
+        print(f"planning for {engine.get_device(device).describe()}")
 
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     u0 = make_laplace_problem(args.ny, args.nx, dtype=dtype,
@@ -68,7 +78,7 @@ def main():
                   f"per halo exchange; --temporal={args.temporal} ignored")
         run = jax.jit(lambda u: engine.run_distributed(
             u, mesh=mesh, policy=policy, iters=args.iters, t=args.depth,
-            row_axis="x"))
+            row_axis="x", device=device))
         run(u0).block_until_ready()  # compile
         t0 = time.perf_counter()
         out = run(u0)
@@ -84,7 +94,8 @@ def main():
             run = jax.jit(lambda u: J.jacobi_run(u, args.iters))
         else:
             run = jax.jit(lambda u: engine.run(
-                u, policy=policy, iters=args.iters, t=args.temporal))
+                u, policy=policy, iters=args.iters, t=args.temporal,
+                device=device))
         run(u0).block_until_ready()
         t0 = time.perf_counter()
         out = run(u0)

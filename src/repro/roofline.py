@@ -1,7 +1,9 @@
 """Three-term roofline analysis from compiled (AOT) artifacts.
 
-TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
-ICI. Terms:
+Hardware constants come from the device-model registry
+(:mod:`repro.engine.device`) — pass ``hw=`` a registry name, a
+:class:`DeviceModel`, or a raw dict to roofline the same program against a
+different chip (default: ``tpu_v5e``). Terms:
 
   compute    = HLO_FLOPs / (chips * peak)
   memory     = HLO_bytes / (chips * hbm_bw)
@@ -20,13 +22,20 @@ import dataclasses
 import re
 from typing import Any
 
-V5E = {
-    "peak_flops": 197e12,      # bf16 per chip
-    "hbm_bw": 819e9,           # bytes/s per chip
-    "ici_bw": 50e9,            # bytes/s per link (one direction)
-    "dci_bw": 6.25e9,          # bytes/s per chip inter-pod (assumed 50 Gbit)
-    "tdp_watts": 215.0,        # chip TDP for the modeled-energy table
-}
+from repro.engine.device import DeviceModel, get_device
+
+#: Legacy alias: the v5e constants, now sourced from the device registry
+#: (single source of truth with the planner and the benchmark tables).
+V5E = get_device("tpu_v5e").as_roofline_hw()
+
+
+def resolve_hw(hw: dict | str | DeviceModel | None) -> dict:
+    """Normalize ``hw`` to the constants dict ``analyze`` consumes."""
+    if hw is None:
+        return V5E
+    if isinstance(hw, dict):
+        return hw
+    return get_device(hw).as_roofline_hw()
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -129,16 +138,20 @@ class Roofline:
 
 
 def analyze(compiled, n_devices: int, model_flops: float = 0.0,
-            pod_size: int | None = None, hw: dict = V5E) -> Roofline:
+            pod_size: int | None = None,
+            hw: dict | str | DeviceModel | None = None) -> Roofline:
     """Loop-aware roofline from the partitioned HLO.
 
-    The SPMD module carries per-partition (local) shapes, so loop-aware dot
-    FLOPs / collective bytes / HBM proxy are already per-chip quantities.
-    XLA's own cost_analysis visits while bodies once (useless under
-    scan-over-layers x grad-accumulation); see hlo_analysis.py, validated
-    against an unrolled compile in tests/test_hlo_analysis.py.
+    ``hw`` is a device-registry name, a DeviceModel, or a raw constants
+    dict (default ``tpu_v5e``). The SPMD module carries per-partition
+    (local) shapes, so loop-aware dot FLOPs / collective bytes / HBM proxy
+    are already per-chip quantities. XLA's own cost_analysis visits while
+    bodies once (useless under scan-over-layers x grad-accumulation); see
+    hlo_analysis.py, validated against an unrolled compile in
+    tests/test_hlo_analysis.py.
     """
     from repro.hlo_analysis import analyze_hlo
+    hw = resolve_hw(hw)
     la = analyze_hlo(compiled.as_text(), n_devices, pod_size)
     flops_per_dev = la.dot_flops
     hbm_per_dev = la.hbm_proxy_bytes

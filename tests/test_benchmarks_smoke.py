@@ -1,0 +1,48 @@
+"""Benchmark-table smoke: every table imports and runs in modeled/dry mode.
+
+With ``REPRO_BENCH_DRY=1``, ``benchmarks.common.time_fn`` skips execution,
+so each ``run()`` exercises exactly the part refactors rot — imports,
+registry enumeration, device-model pricing, row formatting — in
+milliseconds. Each row must honor the harness CSV contract
+(``name,us_per_call,derived``). CI additionally runs the whole suite via
+``python -m benchmarks.run`` in the same mode.
+"""
+import importlib
+
+import pytest
+
+from benchmarks.run import TABLES
+
+
+@pytest.fixture(autouse=True)
+def _dry(monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_DRY", "1")
+
+
+@pytest.mark.parametrize("mod_name", [m for m, _ in TABLES])
+def test_table_runs_dry(mod_name):
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    rows = mod.run()
+    assert rows, f"{mod_name}.run() produced no rows"
+    for line in rows:
+        parts = line.split(",")
+        assert len(parts) == 3, f"bad CSV row from {mod_name}: {line!r}"
+        float(parts[1])  # us_per_call must be numeric
+        assert parts[0] and parts[2]
+
+
+def test_table8_traffic_comes_from_registry():
+    """Table VIII may not hard-code bytes/point: its modeled rows must move
+    if a policy's registered traffic model changes."""
+    import jax.numpy as jnp
+
+    from benchmarks import table8_comparison as t8
+    from repro import engine
+    from repro.core.stencil import jacobi_2d_5pt
+
+    spec = jacobi_2d_5pt()
+    db = jnp.dtype(t8.DTYPE).itemsize
+    got = dict((name, bpp) for name, _, bpp in t8._policy_bpp())
+    for p in engine.registry():
+        t = t8.T if p.fused else 1
+        assert got[p.name] == p.bytes_per_point(spec, db, t)
