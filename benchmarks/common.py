@@ -32,10 +32,12 @@ from repro.roofline import V5E  # noqa: F401  (re-export for the tables)
 _V5E = get_device("tpu_v5e")
 
 # Elementwise (non-matmul) throughput for stencil math on v5e, and the rest
-# of the legacy module constants — all registry-derived now.
+# of the legacy module constants — all registry-derived now (the DMA issue
+# cost moved onto DeviceModel for the backends simulator; this is the v5e
+# entry's value, not a constant).
 VPU_FLOPS = _V5E.vector_flops
 HBM_BW = _V5E.dram_bw
-TXN_OVERHEAD_S = 1e-6   # per-DMA-descriptor issue cost model
+TXN_OVERHEAD_S = _V5E.txn_overhead_s
 CHIP_WATTS = _V5E.tdp_watts
 
 

@@ -39,6 +39,20 @@ def run():
             else max(total_bytes / HBM_BW, n_txn * TXN_OVERHEAD_S)
         rows.append(row(f"rowdma_sync={sync}", t * 1e6,
                         f"model_v5e_s={serial:.5f}"))
+
+    # Model-generated rows: the paper's own 4096^2 sweep priced by the
+    # backends simulator's NoC/DRAM step model on the e150 device entry —
+    # regenerated, not transcribed (compare against the paper_s rows).
+    from repro.backends.report import model_copy_seconds
+    PH = PW = 4096
+    for seg, sync, label in ((PW, False, "16KB_nosync"),
+                             ((1024 // 4), False, "1KB_nosync"),
+                             (1, False, "4B_nosync"),
+                             (1, True, "4B_sync")):
+        s = model_copy_seconds((PH, PW), "int32", seg_cols=seg, sync=sync,
+                               device="grayskull_e150")
+        rows.append(row(f"sim_e150_{label}", 0.0,
+                        f"txn_bytes={seg * 4};model_e150_s={s:.4f}"))
     # paper reference (runtime seconds, 16KB vs 4B batches, read no-sync)
     rows.append(row("paper_16KB_nosync", 0.0, "paper_s=0.011"))
     rows.append(row("paper_4B_nosync", 0.0, "paper_s=1.761"))

@@ -32,6 +32,18 @@ def run():
         shape_kind = "contig" if bn == W else "noncontig"
         rows.append(row(f"copy_{bm}x{bn}_{shape_kind}", t * 1e6,
                         f"txn_bytes={bn*4};model_v5e_s={model:.5f}"))
+
+    # Model-generated rows (backends step model, e150 entry): a column walk
+    # is one descriptor per element, i.e. the 4-byte-batch regime of the
+    # contiguous sweep — the model prices descriptor pressure, which is the
+    # paper's first-order effect (its measured extra ~12% is DRAM row-miss
+    # cost the step model does not carry).
+    from repro.backends.report import model_copy_seconds
+    for seg, label in ((4096, "16KB"), (1, "4B")):
+        s = model_copy_seconds((4096, 4096), "int32", seg_cols=seg,
+                               device="grayskull_e150")
+        rows.append(row(f"sim_e150_{label}_noncontig", 0.0,
+                        f"model_e150_s={s:.4f}"))
     rows.append(row("paper_16KB_noncontig", 0.0, "paper_s=0.011"))
     rows.append(row("paper_4B_noncontig", 0.0, "paper_s=1.969"))
     return rows

@@ -10,6 +10,7 @@ misaligned widths that waste a partial (8,128) tile per row — the same
 import jax
 import jax.numpy as jnp
 
+from repro.backends.report import model_copy_seconds, tile_efficiency
 from repro.kernels.stream import stream_copy
 from benchmarks.common import time_fn, row, HBM_BW
 
@@ -25,11 +26,26 @@ def run():
         fn = jax.jit(lambda v, b=bn: stream_copy(v, bm=128, bn=b,
                                                  interpret=True))
         t = time_fn(fn, x, warmup=1, iters=3)
-        padded_w = -(-w // 128) * 128  # storage rounds to lane multiples
-        eff = w / padded_w
-        model = (h * padded_w * 4) / HBM_BW
+        # Storage rounds to the device's native tile — the efficiency and
+        # the padded-traffic model both come from the backends layer now.
+        eff = tile_efficiency(h, w, device="tpu_v5e")
+        model = (h * w * 4 / eff) / HBM_BW
         rows.append(row(f"width_{w}_{note}", t * 1e6,
                         f"tile_efficiency={eff:.3f};model_v5e_s={model:.6f}"))
+
+    # Model-generated rows: the paper's interleaving experiment (replicated
+    # 32x load, DRAM pages spread across both NoCs vs bound to one) priced
+    # by the backends step model on the e150 entry.
+    for interleaved, label in ((False, "none_repl32"), (True, "32KB_repl32")):
+        s = model_copy_seconds((4096, 4096), "int32", seg_cols=4096,
+                               reads=32, interleaved=interleaved,
+                               device="grayskull_e150")
+        rows.append(row(f"sim_e150_{label}", 0.0, f"model_e150_s={s:.4f}"))
+    # ...and the Tensix tile-alignment cost on the e150's own 32x32 tiles.
+    for w in (1024, 1026):
+        eff = tile_efficiency(512, w, device="grayskull_e150")
+        rows.append(row(f"sim_e150_tile_width_{w}", 0.0,
+                        f"tile_efficiency={eff:.3f}"))
     rows.append(row("paper_none_repl32", 0.0, "paper_s=0.162"))
     rows.append(row("paper_32KB_repl32", 0.0, "paper_s=0.079"))
     return rows

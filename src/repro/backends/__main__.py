@@ -1,0 +1,12 @@
+"""``python -m repro.backends`` — the backends CI smoke.
+
+Dispatches to :func:`repro.backends.sim._smoke` without re-executing the
+``sim`` module under a second name (``python -m repro.backends.sim`` would
+import it twice: once via the package ``__init__`` and once as
+``__main__``, duplicating its exception classes). The guard keeps the
+module import-safe for the package-tree import test.
+"""
+from repro.backends.sim import _smoke
+
+if __name__ == "__main__":
+    raise SystemExit(_smoke())

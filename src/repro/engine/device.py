@@ -36,6 +36,15 @@ class DeviceModel:
     throughput stencil math actually runs at. Bandwidths are bytes/s:
     ``dram_bw`` per chip, ``interconnect_bw`` per on-board/pod link (ICI,
     NVLink, PCIe), ``inter_node_bw`` across nodes/pods (DCI, Ethernet).
+
+    The trailing defaulted fields describe the on-chip transport fabric the
+    :mod:`repro.backends` simulator steps over: the native fast-memory tile
+    (32x32 for Tensix, (8,128) for a TPU lane tile), how many circular
+    buffers one core's SRAM can host, how many NoCs carry DRAM traffic,
+    per-hop latency, the effective per-core streaming bandwidth
+    (``noc_bw``; 0 means "no separate NoC constraint, use ``dram_bw``"),
+    the per-DMA-descriptor issue cost, and the physical core grid
+    (``core_grid``; None derives a near-square grid from ``cores``).
     """
 
     name: str
@@ -50,6 +59,15 @@ class DeviceModel:
     interconnect_bw: float
     inter_node_bw: float
     tdp_watts: float
+    # --- NoC / tile fabric (consumed by repro.backends) -------------------
+    tile_rows: int = 32
+    tile_cols: int = 32
+    cb_count: int = 16        # circular buffers a core's SRAM can host
+    noc_count: int = 1        # independent NoCs usable for DRAM streams
+    noc_hop_latency_s: float = 1e-8
+    noc_bw: float = 0.0       # per-core streaming bytes/s; 0 -> dram_bw
+    txn_overhead_s: float = 1e-6  # per-DMA-descriptor issue cost
+    core_grid: tuple[int, int] | None = None
 
     @property
     def preferred_jax_dtype(self):
@@ -58,6 +76,25 @@ class DeviceModel:
     @property
     def fast_memory_mib(self) -> float:
         return self.fast_memory_bytes / 2**20
+
+    @property
+    def tile_shape(self) -> tuple[int, int]:
+        return (self.tile_rows, self.tile_cols)
+
+    @property
+    def stream_bw(self) -> float:
+        """Effective per-core DRAM streaming bandwidth (bytes/s)."""
+        return self.noc_bw if self.noc_bw > 0 else self.dram_bw
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        """Physical (rows, cols) core layout; derived near-square if unset."""
+        if self.core_grid is not None:
+            return self.core_grid
+        rows = max(1, int(self.cores ** 0.5))
+        while self.cores % rows:
+            rows -= 1
+        return (rows, self.cores // rows)
 
     def as_roofline_hw(self) -> dict:
         """The dict shape :func:`repro.roofline.analyze` consumes."""
@@ -144,6 +181,14 @@ TPU_V5E = register_device(DeviceModel(
     interconnect_bw=50e9,      # ICI per link, one direction
     inter_node_bw=6.25e9,      # DCI (assumed 50 Gbit)
     tdp_watts=215.0,
+    tile_rows=8,               # native VMEM lane tile for f32
+    tile_cols=128,
+    cb_count=16,               # staging-buffer file modeled as Tensix-equivalent
+    noc_count=1,
+    noc_hop_latency_s=5e-9,
+    noc_bw=0.0,                # monolithic chip: DRAM bw is the constraint
+    txn_overhead_s=1e-6,       # the legacy benchmarks TXN_OVERHEAD_S value
+    core_grid=(1, 1),
 ))
 
 GRAYSKULL_E150 = register_device(DeviceModel(
@@ -163,6 +208,18 @@ GRAYSKULL_E150 = register_device(DeviceModel(
     # inter-card rides host PCIe+memory, modeled as a thin pipe.
     inter_node_bw=1.25e9,
     tdp_watts=200.0,
+    tile_rows=32,              # Tensix math works on 32x32 bf16 tiles
+    tile_cols=32,
+    cb_count=16,               # tt-metal exposes 16 circular buffers per core
+    noc_count=2,               # two NoCs; page interleaving can split streams
+    # Effective constants fit to the paper's Table III single-core access
+    # sweep: a 4096^2 int32 read+write stream lands at 0.011 s (~12 GB/s
+    # through one core), the 4 B-batch row implies ~105 ns per descriptor,
+    # and the per-access-sync row a ~33 ns/hop round-trip share.
+    noc_hop_latency_s=3.3e-8,
+    noc_bw=12e9,
+    txn_overhead_s=1.05e-7,
+    core_grid=(9, 12),         # the 108 usable cores of the e150
 ))
 
 GPU_SM90 = register_device(DeviceModel(
@@ -178,6 +235,14 @@ GPU_SM90 = register_device(DeviceModel(
     interconnect_bw=450e9,     # NVLink per direction
     inter_node_bw=50e9,        # 400 Gbit NIC
     tdp_watts=700.0,
+    tile_rows=32,
+    tile_cols=32,
+    cb_count=16,
+    noc_count=1,
+    noc_hop_latency_s=2e-9,
+    noc_bw=25e9,               # ~per-SM share of HBM at full occupancy
+    txn_overhead_s=2e-7,
+    core_grid=(11, 12),
 ))
 
 CPU_REF = register_device(DeviceModel(
@@ -193,4 +258,12 @@ CPU_REF = register_device(DeviceModel(
     interconnect_bw=41.6e9,    # UPI
     inter_node_bw=12.5e9,      # 100 Gbit NIC
     tdp_watts=205.0,
+    tile_rows=1,               # AVX-512 f32 vector as the "tile"
+    tile_cols=16,
+    cb_count=16,
+    noc_count=1,
+    noc_hop_latency_s=1e-8,
+    noc_bw=12e9,               # per-core share of DRAM under all-core load
+    txn_overhead_s=1e-7,
+    core_grid=(4, 6),
 ))

@@ -33,15 +33,18 @@ from repro.engine.plan import plan_for
 
 def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
                     dtype, bm: int | None = None, interpret: bool = False,
-                    device: str | None = None):
+                    device: str | None = None,
+                    mesh_shape: tuple | None = None):
     """Resolve a policy name to a single-sweep callable on extended shards.
 
     ``"reference"`` selects the pure-jnp oracle; ``"auto"`` consults the
     planner and ``"tuned"`` the measured autotune cache, both against the
     (static) extended shard shape on ``device`` — the shard, not the global
-    grid, is what the local kernel actually runs on. For registry policies
-    the shard plan is resolved eagerly here, surfacing device-budget
-    violations before shard_map tracing starts.
+    grid, is what the local kernel actually runs on (``mesh_shape`` folds
+    the decomposition into the tuned cache key so local and distributed
+    winners never alias). For registry policies the shard plan is resolved
+    eagerly here, surfacing device-budget violations before shard_map
+    tracing starts.
     """
     if policy == "reference":
         return lambda ext: apply_stencil(ext, spec)
@@ -51,7 +54,8 @@ def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
     elif policy == "tuned":
         from repro.engine import tune  # deferred: tune dispatches back here
         policy = tune.best_policy(shard_shape, dtype, spec, iters=1, t=1,
-                                  bm=bm, interpret=interpret, device=device)
+                                  bm=bm, interpret=interpret, device=device,
+                                  mesh=mesh_shape)
     p = get_policy(policy)
     plan_for(shard_shape, dtype, spec, policy, bm=bm,
              t=1 if p.fused else None, device=device)
@@ -88,8 +92,10 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
     t_eff = max(1, min(t, iters))
     shard_shape = dstencil.extended_shard_shape(
         u.shape, mesh, spec, t=t_eff, row_axis=row_axis, col_axis=col_axis)
+    mesh_shape = tuple(mesh.shape[a] for a in (row_axis, col_axis)
+                       if a is not None)
     sweep = local_sweep_for(policy, spec, shard_shape=shard_shape,
                             dtype=u.dtype, bm=bm, interpret=interpret,
-                            device=device)
+                            device=device, mesh_shape=mesh_shape)
     return dstencil.run_sharded(u, spec, mesh, sweep, iters=iters, t=t_eff,
                                 row_axis=row_axis, col_axis=col_axis)

@@ -57,8 +57,16 @@ def _cache_path(cache_path: str | None) -> str:
 
 
 def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
-             t: int | None, bm: int | None, interpret: bool = True) -> str:
-    """Stable cache key for one autotune cell."""
+             t: int | None, bm: int | None, interpret: bool = True,
+             mesh: tuple | None = None) -> str:
+    """Stable cache key for one autotune cell.
+
+    ``mesh`` is the decomposition shape when the caller is tuning a *shard*
+    (``engine.run_distributed``): the same local shape can want a different
+    winner under a different decomposition (halo bands change the window
+    geometry), so single-device cells (``mesh=None`` -> ``mesh=local``)
+    and per-mesh cells never share winners.
+    """
     return "|".join([
         "x".join(str(int(s)) for s in shape),
         jnp.dtype(dtype).name,
@@ -67,6 +75,8 @@ def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
         f"t={t if t is not None else DEFAULT_T}",
         f"bm={bm if bm is not None else 'auto'}",
         f"interpret={bool(interpret)}",
+        "mesh=" + ("local" if mesh is None else
+                   "x".join(str(int(m)) for m in mesh)),
     ])
 
 
@@ -169,18 +179,21 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
                 t: int | None = None, bm: int | None = None,
                 interpret: bool = True,
                 device: str | DeviceModel | None = None,
+                mesh: tuple | None = None,
                 cache_path: str | None = None) -> str:
     """The measured-fastest policy for this cell; measured at most once.
 
     Lookup order: in-memory cache -> JSON file -> measure (and persist).
     Fused winners are only eligible when ``iters`` can amortize them, so a
     single-sweep call re-buckets to ``t=1`` (matching ``run``'s remainder
-    semantics) rather than inheriting a t=8 winner it cannot run.
+    semantics) rather than inheriting a t=8 winner it cannot run. ``mesh``
+    buckets distributed-shard cells by decomposition shape (the
+    measurement itself still times the local shard kernel).
     """
     dev = get_device(device)
     t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
     key = tune_key(shape, dtype, spec, dev, t=t_eff, bm=bm,
-                   interpret=interpret)
+                   interpret=interpret, mesh=mesh)
     path = _cache_path(cache_path)
     cache = _cache_for(path)
     rec = cache.get(key)

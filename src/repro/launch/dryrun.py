@@ -144,6 +144,61 @@ def run_cell(arch: str, shape: str, mesh_name: str, outdir: str,
     return rec
 
 
+def run_sim_cells(args) -> int:
+    """``--backend sim``: dry-run the *stencil* cells through the backends
+    lowering + functional simulator instead of XLA-compiling model cells.
+
+    One cell per registry policy on the jacobi2d smoke config: lower to the
+    Tensix-style program, simulate a few sweeps, record the IR shape and
+    the modeled roofline terms to ``<outdir>/sim/<policy>.json`` — the same
+    resumable-JSON convention as the XLA cells.
+    """
+    from repro import backends
+    from repro.backends.report import summarize
+    from repro.configs import jacobi2d
+    from repro.core.stencil import make_laplace_problem
+
+    cfg = jacobi2d.smoke()
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    u = make_laplace_problem(cfg.ny, cfg.nx, dtype=dtype, left=1.0,
+                             right=0.0)
+    outdir = os.path.join(args.outdir, "sim")
+    os.makedirs(outdir, exist_ok=True)
+    failures = 0
+    for policy in backends.lowerable_policies():
+        path = os.path.join(outdir, f"{policy}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached ] sim      {policy}")
+            continue
+        t0 = time.time()
+        try:
+            res = backends.simulate(u, policy=policy, iters=cfg.iters,
+                                    t=cfg.temporal,
+                                    device=args.device_model)
+            rec = {"backend": "sim", "policy": policy, "status": "ok",
+                   "grid": [cfg.ny, cfg.nx], "iters": cfg.iters,
+                   "sim_s": round(time.time() - t0, 2),
+                   "program": res.programs[0].describe(),
+                   "counters": res.counters.as_dict(),
+                   "summary": summarize(res)}
+            s = rec["summary"]
+            extra = (f"model={s['model_time_s'] * 1e3:8.3f}ms "
+                     f"gpts={s['gpts']:7.3f} "
+                     f"bytes/pt={s['bytes_per_point']:6.2f} "
+                     f"cores={s['cores_used']}")
+        except Exception as e:
+            failures += 1
+            rec = {"backend": "sim", "policy": policy, "status": "error",
+                   "error": repr(e), "traceback": traceback.format_exc()}
+            extra = rec["error"][:120]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[{rec['status']:7s}] sim      {policy:12s} {extra}",
+              flush=True)
+    print(f"\ndone; {failures} failures")
+    return 1 if failures else 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -152,9 +207,16 @@ def main():
     ap.add_argument("--device-model", default="tpu_v5e",
                     help="device registry name whose roofline constants "
                          "price the compiled cells (repro.engine.device)")
+    ap.add_argument("--backend", default="xla", choices=["xla", "sim"],
+                    help="'xla' AOT-compiles the model cells; 'sim' runs "
+                         "the stencil cells through the backends lowering "
+                         "+ functional simulator (repro.backends)")
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+
+    if args.backend == "sim":
+        return run_sim_cells(args)
 
     archs = [args.arch] if args.arch else sorted(configs.ARCHS)
     shapes = [args.shape] if args.shape else list(SHAPES)

@@ -38,6 +38,12 @@ def main():
                     help="device registry name to plan against (e.g. "
                          "tpu_v5e, grayskull_e150); default: detect the "
                          "host backend")
+    ap.add_argument("--backend", default="jax", choices=["jax", "sim"],
+                    help="'jax' runs the Pallas/XLA engine; 'sim' lowers "
+                         "the policy to a Tensix-style three-kernel "
+                         "program and runs the functional simulator "
+                         "(repro.backends), reporting modeled GPt/s and "
+                         "per-kernel counters for the device model")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--depth", type=int, default=1,
                     help="halo exchange depth (sweeps per exchange)")
@@ -57,6 +63,47 @@ def main():
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     u0 = make_laplace_problem(args.ny, args.nx, dtype=dtype,
                               left=1.0, right=0.0)
+
+    if args.backend == "sim":
+        # Lower to the decoupled reader/compute/writer program and run the
+        # functional simulator: numbers + modeled cost, no XLA involved.
+        from repro import backends
+        from repro.backends.report import summarize
+        if args.devices > 1:
+            raise SystemExit("--backend sim models one chip's core grid; "
+                             "drop --devices (cores are simulated inside)")
+        policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
+        if policy in ("ref", "reference"):
+            policy = "rowchunk"  # the oracle has no lowering; use §VI
+        t0 = time.perf_counter()
+        res = backends.simulate(u0, policy=policy, iters=args.iters,
+                                t=args.temporal, device=device)
+        dt = time.perf_counter() - t0
+        s = summarize(res)
+        result = np.asarray(res.grid)[1:-1, 1:-1]
+        print(res.programs[0].describe())
+        print(f"kernel={s['policy']} backend=sim device={s['device']} "
+              f"grid={args.ny}x{args.nx} iters={args.iters} "
+              f"cores={s['cores_used']}")
+        print(f"sim_wall={dt:.3f}s  model={s['model_time_s']:.6f}s  "
+              f"model_GPt/s={s['gpts']:.3f}  "
+              f"model_energy_J={s['energy_j']:.3f} (MODELED)  "
+              f"bytes/pt={s['bytes_per_point']:.2f}  "
+              f"dram_txns={s['dram_txns']}")
+        print(f"mean={float(result.mean()):.6f}  "
+              f"max={float(result.max()):.6f}")
+        if args.check:
+            from repro.kernels import ref
+            want = u0
+            for _ in range(args.iters):
+                want = ref.jacobi_step(want)
+            err = np.abs(result.astype(np.float32)
+                         - np.asarray(want).astype(np.float32)[1:-1, 1:-1]
+                         ).max()
+            print(f"max |err| vs reference: {err:.3e}")
+            assert err < (1e-4 if dtype == jnp.float32 else 5e-2), err
+            print("CHECK OK")
+        return
 
     if args.devices > 1:
         # Any kernel policy runs per shard inside the depth-t halo loop —
