@@ -13,7 +13,8 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import dry_run, row, HBM_BW, model_jacobi_gpts  # noqa: F401
+from benchmarks.common import (dry_run, row, HBM_BW,  # noqa: F401
+                               TXN_OVERHEAD_S, model_jacobi_gpts)
 from repro.roofline import V5E
 
 _SCRIPT = r"""
@@ -82,7 +83,47 @@ def run():
         rows.append(row(f"v5e_chips{ndev}_depth{depth}",
                         rec["coll_bytes_per_sweep"],
                         f"model_GPt/s={gpts:.1f};halo_frac={halo_t/t:.3f}"))
+    rows.extend(_fused_schedule_rows(npts))
     rows.append(row("paper_e150_108cores", 0.0, "paper_GPt/s=22.06"))
     rows.append(row("paper_4xe150_432cores", 0.0, "paper_GPt/s=86.75"))
     rows.append(row("paper_cpu_24cores", 0.0, "paper_GPt/s=21.61"))
     return rows
+
+
+def _fused_schedule_rows(npts: int, w: int = 9216, db: int = 2,
+                         sweeps: int = 16):
+    """Fused-vs-unfused exchange tradeoff, priced from the real schedule.
+
+    The depth rows above amortize *latency* but still pay full HBM traffic
+    every sweep (the local kernel is non-fused). These rows run the
+    ``temporal`` policy per shard: the same :class:`SweepSchedule` both
+    executors use says how many exchanges a run costs, and the registry's
+    traffic model says what fusion saves in DRAM bytes — so the table
+    moves if either the schedule or the policy's traffic model changes.
+    """
+    from repro.core.stencil import jacobi_2d_5pt
+    from repro.engine.dispatch import get_policy
+    from repro.engine.schedule import build_schedule
+
+    spec = jacobi_2d_5pt()
+    temporal = get_policy("temporal")
+    out = []
+    for ndev in (1, 2, 4, 8):
+        for tt in (1, 8):
+            sched = build_schedule(
+                sweeps, spec=spec, shape=(1024 // ndev + 2, w), dtype="bfloat16",
+                policy="temporal", t=tt, device="tpu_v5e",
+                exchange_cadence=True)
+            bpp = temporal.bytes_per_point(spec, db, sched.t)
+            hbm_t = (npts / ndev) * bpp / HBM_BW           # per sweep
+            halo_bytes = 0 if ndev == 1 else \
+                2 * sched.halo_depth * w * db              # per exchange
+            halo_t = (sched.exchanges * halo_bytes / sweeps) / V5E["ici_bw"] \
+                + (sched.exchanges / sweeps) * TXN_OVERHEAD_S
+            step = max(hbm_t, halo_t)
+            gpts = npts / step / 1e9
+            out.append(row(
+                f"v5e_chips{ndev}_fused_t{sched.t}", halo_bytes,
+                f"model_GPt/s={gpts:.1f};exchanges={sched.exchanges};"
+                f"halo_depth={sched.halo_depth};bytes_pt={bpp:.2f}"))
+    return out

@@ -96,6 +96,9 @@ class ReadBlock:
     blocks). ``sync`` waits for each transaction round-trip before issuing
     the next (the paper's Table III per-access synchronization mode).
     ``reads`` > 1 replays the same region (Table V replicated reads).
+    ``src`` names the DRAM stream the region comes from: ``"grid"`` (the
+    stencil state) or ``"mask"`` (the masked-temporal shard program's
+    pin-mask operand, supplied to the simulator alongside the grid).
     """
 
     cb: str
@@ -108,6 +111,7 @@ class ReadBlock:
     clamp: bool = False
     sync: bool = False
     reads: int = 1
+    src: str = "grid"
 
     def txns(self) -> int:
         """DRAM descriptors one execution of this op issues."""
@@ -163,14 +167,21 @@ class TapCombine:
 @dataclasses.dataclass(frozen=True)
 class LocalSweeps:
     """Advance the resident window ``t`` sweeps entirely in SRAM (temporal
-    blocking), re-pinning global Dirichlet cells between sweeps. The valid
+    blocking), re-pinning Dirichlet cells between sweeps. The valid
     region shrinks by ``r`` rows/cols per sweep; the simulator charges the
     full-window redundant halo compute, which is the cost the schedule
-    trades for DRAM traffic."""
+    trades for DRAM traffic.
+
+    Without ``mask`` the pinned set is the grid's own radius-``r`` ring
+    (computed from geometry). With ``mask`` naming a CB, the pinned set is
+    streamed in explicitly — the distributed-shard form, where only the
+    shard's slice of the *global* ring is pinned and exchanged halo cells
+    evolve with the fused sweeps."""
 
     src: str
     dst: str
     t: int
+    mask: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +266,8 @@ class TensixProgram:
         for op in self.compute:
             srcs = (op.srcs if isinstance(op, TapCombine)
                     else (op.src,) if hasattr(op, "src") else ())
+            if isinstance(op, LocalSweeps) and op.mask is not None:
+                srcs = srcs + (op.mask,)
             for s in srcs:
                 _need(names, s, "compute")
                 if s not in produced:
@@ -303,7 +316,8 @@ def _op_str(op) -> str:
         mode = "contig" if op.contiguous else "strided"
         extra = "".join([" clamp" if op.clamp else "",
                          " sync" if op.sync else "",
-                         f" x{op.reads}" if op.reads > 1 else ""])
+                         f" x{op.reads}" if op.reads > 1 else "",
+                         f" src={op.src}" if op.src != "grid" else ""])
         return (f"read_block  -> {op.cb:8s} rows={op.rows} dy={op.dy:+d} "
                 f"cols=[{op.col0},{op.col0 + op.cols}) {mode}{extra}")
     if isinstance(op, WriteBlock):
@@ -321,7 +335,8 @@ def _op_str(op) -> str:
     if isinstance(op, TapCombine):
         return f"tap_combine {'+'.join(op.srcs)} -> {op.dst}"
     if isinstance(op, LocalSweeps):
-        return f"local_sweeps {op.src} -> {op.dst} t={op.t}"
+        masked = f" mask={op.mask}" if op.mask else ""
+        return f"local_sweeps {op.src} -> {op.dst} t={op.t}{masked}"
     return repr(op)
 
 

@@ -126,7 +126,18 @@ def _lower_temporal(spec, plan, dev, dtype, cdtype, tilized):
                                 cols=w, contiguous=True, clamp=True))
     cbs.append(_cb("in", win, w, dev, cdtype if tilized else dtype,
                    layout="tiles" if tilized else "row_major"))
-    compute = [LocalSweeps(src="in", dst="out", t=t)]
+    mask_cb = None
+    if plan.masked:
+        # The distributed-shard form: the pin mask streams in beside the
+        # grid window (row-major bookkeeping data, never tilized) and the
+        # sweeps re-pin exactly the cells it marks — the shard's slice of
+        # the global Dirichlet ring, not the whole block edge.
+        mask_cb = "mask"
+        cbs.append(_cb(mask_cb, win, w, dev, dtype))
+        reader.append(ReadBlock(cb=mask_cb, dy=-t * r, rows=win, col0=0,
+                                cols=w, contiguous=True, clamp=True,
+                                src="mask"))
+    compute = [LocalSweeps(src="in", dst="out", t=t, mask=mask_cb)]
     cbs.append(_cb("out", bm, w, dev, cdtype if tilized else dtype,
                    layout="tiles" if tilized else "row_major"))
     if tilized:
@@ -194,9 +205,16 @@ def lower_plan(plan: ExecutionPlan, *, tilized: bool | None = None
 def lower(shape, dtype, spec: StencilSpec, policy: str, *,
           bm: int | None = None, t: int | None = None,
           device: str | DeviceModel | None = None,
-          tilized: bool | None = None) -> TensixProgram:
-    """Plan (cached, device-validated) then lower in one call."""
-    plan = plan_for(shape, dtype, spec, policy, bm=bm, t=t, device=device)
+          tilized: bool | None = None, masked: bool = False
+          ) -> TensixProgram:
+    """Plan (cached, device-validated) then lower in one call.
+
+    ``masked`` lowers the temporal policy's distributed-shard form: an
+    explicit pin-mask stream feeds the local sweeps instead of the
+    geometric ring mask.
+    """
+    plan = plan_for(shape, dtype, spec, policy, bm=bm, t=t, device=device,
+                    masked=masked)
     return lower_plan(plan, tilized=tilized)
 
 

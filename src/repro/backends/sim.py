@@ -35,10 +35,10 @@ import numpy as np
 
 from repro.core.stencil import StencilSpec, jacobi_2d_5pt
 from repro.engine.device import DeviceModel
-from repro.engine.dispatch import DEFAULT_REMAINDER_POLICY, resolve_auto
-from repro.engine.plan import DEFAULT_T
+from repro.engine.schedule import DEFAULT_REMAINDER_POLICY, build_schedule
 from repro.backends.lower import lower as _lower
-from repro.backends.ir import (CBOverflowError, CBUnderflowError, LocalSweeps,
+from repro.backends.ir import (BackendError, CBOverflowError,
+                               CBUnderflowError, LocalSweeps,
                                ReadBlock, TapCombine, TapReduce,
                                TensixProgram, Tilize, Untilize, WriteBlock,
                                np_dtype, tile_grid, tilize, untilize)
@@ -180,11 +180,13 @@ def _xfer_seconds(bytes_: int, txns: int, hops: int, dev: DeviceModel,
 
 def _run_block(prog: TensixProgram, u: np.ndarray, out: np.ndarray,
                block: int, hops: int, counters: SimCounters,
-               pipe_bw: float) -> tuple[float, float, float, int]:
+               pipe_bw: float, mask: np.ndarray | None = None
+               ) -> tuple[float, float, float, int]:
     """Execute one grid block through reader -> compute -> writer.
 
     Returns the three stage times and the block's DRAM byte count;
-    numeric effects land in ``out``.
+    numeric effects land in ``out``. ``mask`` is the second DRAM stream
+    masked-temporal programs read their pin cells from.
     """
     dev = prog.plan.device
     plan = prog.plan
@@ -200,11 +202,19 @@ def _run_block(prog: TensixProgram, u: np.ndarray, out: np.ndarray,
 
     for op in prog.reader:
         if isinstance(op, ReadBlock):
+            if op.src == "mask":
+                if mask is None:
+                    raise BackendError(
+                        f"program {prog.policy!r} reads a pin-mask stream "
+                        f"but the simulator was given no mask")
+                src_arr = mask
+            else:
+                src_arr = u
             start = row0 + op.dy
             if op.clamp:
                 start = int(np.clip(start, 0, h - op.rows))
-            data = np.asarray(u[start:start + op.rows,
-                                op.col0:op.col0 + op.cols])
+            data = np.asarray(src_arr[start:start + op.rows,
+                                      op.col0:op.col0 + op.cols])
             entry = _block_entry(data, dev)
             entry["row_start"] = start
             cbs.push(op.cb, entry)
@@ -246,10 +256,15 @@ def _run_block(prog: TensixProgram, u: np.ndarray, out: np.ndarray,
             c0 = _entry_2d(e).astype(np.float32)
             ws = e["row_start"]
             win = e["rows"]
-            grow = ws + np.arange(win, dtype=np.int32)[:, None]
-            gcol = np.arange(w, dtype=np.int32)[None, :]
-            fixed = ((grow < r) | (grow >= h - r)
-                     | (gcol < r) | (gcol >= w - r))
+            if op.mask is not None:
+                # Explicit pin set (distributed-shard form): the mask CB
+                # holds the same window of the mask stream.
+                fixed = _entry_2d(cbs.pop(op.mask)) != 0
+            else:
+                grow = ws + np.arange(win, dtype=np.int32)[:, None]
+                gcol = np.arange(w, dtype=np.int32)[None, :]
+                fixed = ((grow < r) | (grow >= h - r)
+                         | (gcol < r) | (gcol >= w - r))
             c = c0
             for _ in range(op.t):
                 acc = None
@@ -332,12 +347,14 @@ def _do_untilize(op: Untilize, cbs: _CBState, dev: DeviceModel,
 
 
 def run_program(u: np.ndarray, prog: TensixProgram, *,
-                core_times: dict[int, float] | None = None
+                core_times: dict[int, float] | None = None,
+                mask: np.ndarray | None = None
                 ) -> tuple[np.ndarray, SimCounters, dict[int, float]]:
     """Advance ``u`` by one execution of ``prog`` over the virtual cores.
 
     Returns (new grid, counters for this execution, per-core busy seconds —
-    cumulative when ``core_times`` is passed in).
+    cumulative when ``core_times`` is passed in). ``mask`` supplies the
+    pin-mask DRAM stream masked-temporal programs read.
     """
     dev = prog.plan.device
     nblocks = prog.plan.nblocks
@@ -355,7 +372,7 @@ def run_program(u: np.ndarray, prog: TensixProgram, *,
         # longest NoC path, which is what per-access sync exposes).
         hops = abs(cy - (gy - 1) // 2) + abs(cx - (gx - 1) // 2) + 1
         tr, tc, tw, blk_bytes = _run_block(prog, u, out, i, hops, counters,
-                                           pipe_bw)
+                                           pipe_bw, mask=mask)
         counters.reader.seconds += tr
         counters.compute.seconds += tc
         counters.writer.seconds += tw
@@ -385,58 +402,67 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
              iters: int = 1, bm: int | None = None, t: int | None = None,
              device: str | DeviceModel | None = None,
              tilized: bool | None = None, interleaved: bool = False,
+             mask=None,
              remainder_policy: str = DEFAULT_REMAINDER_POLICY) -> SimResult:
     """Advance a ringed grid ``iters`` sweeps through the lowered backend.
 
     The contract mirrors :func:`repro.engine.run` exactly — same policy
-    names (``"auto"`` resolves the device-aware heuristic), same temporal
-    semantics (``iters // t`` fused round-trips + a non-fused remainder) —
-    but execution goes through lowering and the functional simulator, so
-    the result carries per-kernel counters and a modeled chip time
-    alongside the numbers.
+    names (``"auto"`` resolves the device-aware heuristic), and the *same*
+    :class:`~repro.engine.schedule.SweepSchedule` decides how ``iters``
+    split into fused round-trips plus a non-fused remainder — but
+    execution goes through lowering and the functional simulator, so the
+    result carries per-kernel counters and a modeled chip time alongside
+    the numbers. ``mask`` (optional, grid-shaped, nonzero = pinned) lowers
+    fused blocks in their masked distributed-shard form, with the pin set
+    streamed from DRAM instead of derived from the ring geometry.
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     u_np = np.asarray(u)
     shape, dtype = u_np.shape, u_np.dtype
-    if policy == "auto":
-        policy = resolve_auto(shape, dtype, spec, iters=iters, t=t,
-                              device=device)
-    elif policy == "tuned":
-        from repro.engine import tune
-        policy = tune.best_policy(shape, dtype, spec, iters=iters, t=t,
-                                  bm=bm, device=device)
+    mask_np = None if mask is None else np.asarray(mask).astype(dtype)
+    sched = build_schedule(iters, spec=spec, shape=shape, dtype=dtype,
+                           policy=policy, t=t, bm=bm, interpret=True,
+                           device=device, remainder_policy=remainder_policy)
+    if mask_np is not None and (not sched.fused or sched.remainder):
+        # Only fused blocks honor the pin mask; a non-fused policy (or the
+        # non-fused remainder sweeps) would silently re-pin the geometric
+        # ring instead of the mask — refuse rather than model the wrong
+        # schedule.
+        raise BackendError(
+            f"mask requires a fully-fused schedule; got {sched.describe()} "
+            f"(pick a fused policy and iters divisible by t)")
 
     programs = []
-    schedule: list[tuple[TensixProgram, int]] = []
-    if policy == "temporal":
-        t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
-        nfull, rem = divmod(iters, t_eff)
-        if nfull:
-            prog = _lower(shape, dtype, spec, "temporal", bm=bm, t=t_eff,
-                          device=device, tilized=tilized)
+    prog_reps: list[tuple[TensixProgram, int]] = []
+    if sched.fused:
+        if sched.fused_blocks:
+            prog = _lower(shape, dtype, spec, sched.policy, bm=bm,
+                          t=sched.t, device=device, tilized=tilized,
+                          masked=mask_np is not None)
             prog = dataclasses.replace(prog, interleaved=interleaved)
-            schedule.append((prog, nfull))
-        if rem or not schedule:
-            # rem == 0 with an empty schedule is iters == 0: lower the
+            prog_reps.append((prog, sched.fused_blocks))
+        if sched.remainder or not prog_reps:
+            # remainder == 0 with no program yet is iters == 0: lower the
             # remainder program with zero reps so the grid passes through
             # unchanged, exactly like engine.run's zero-length scan.
-            prog = _lower(shape, dtype, spec, remainder_policy, bm=bm,
+            prog = _lower(shape, dtype, spec, sched.remainder_policy, bm=bm,
                           device=device, tilized=tilized)
             prog = dataclasses.replace(prog, interleaved=interleaved)
-            schedule.append((prog, rem))
+            prog_reps.append((prog, sched.remainder))
     else:
-        prog = _lower(shape, dtype, spec, policy, bm=bm, device=device,
+        prog = _lower(shape, dtype, spec, sched.policy, bm=bm, device=device,
                       tilized=tilized)
         prog = dataclasses.replace(prog, interleaved=interleaved)
-        schedule.append((prog, iters))
+        prog_reps.append((prog, sched.iters))
 
     total = SimCounters()
     core_times: dict[int, float] = {}
-    for prog, reps in schedule:
+    for prog, reps in prog_reps:
         programs.append(prog)
         for _ in range(reps):
             u_np, counters, core_times = run_program(u_np, prog,
-                                                     core_times=core_times)
+                                                     core_times=core_times,
+                                                     mask=mask_np)
             total.merge(counters)
     dev = programs[0].plan.device
     ncores = min(programs[0].plan.nblocks, dev.cores)
@@ -489,5 +515,27 @@ def _smoke(device: str = "grayskull_e150") -> int:
               f"bytes/pt={s['bytes_per_point']:6.2f} "
               f"model={s['model_time_s'] * 1e6:8.1f}us "
               f"gpts={s['gpts']:7.3f} on {s['device']}")
+
+    # Masked-temporal: the distributed-shard form. Pin a t*r-deep band on
+    # the top/left (the shard's slice of the global ring); the bottom/right
+    # edges play exchanged halo and must evolve with the fused sweeps.
+    # Valid region = everything at least t*r away from an unpinned edge.
+    t, d = 2, 2 * spec.radius
+    h, w = u.shape
+    mask = np.zeros((h, w), bool)
+    mask[:d, :] = mask[:, :d] = True
+    res = simulate(u, spec, policy="temporal", iters=t, t=t, device=device,
+                   mask=mask)
+    wantm = jnp.asarray(u)
+    for _ in range(t):
+        wantm = jnp.where(jnp.asarray(mask), jnp.asarray(u),
+                          apply_stencil(wantm, spec))
+    ok = np.array_equal(np.asarray(res.grid)[:h - d, :w - d],
+                        np.asarray(wantm)[:h - d, :w - d])
+    failures += not ok
+    s = summarize(res)
+    print(f"{'ok  ' if ok else 'FAIL'} {'temporal+mask':13s} "
+          f"bytes/pt={s['bytes_per_point']:6.2f} "
+          f"model={s['model_time_s'] * 1e6:8.1f}us on {s['device']}")
     print("BACKENDS SMOKE " + ("OK" if not failures else "FAILED"))
     return 1 if failures else 0

@@ -166,7 +166,8 @@ def make_distributed_step(
     spec = jacobi_2d_5pt()
     sweep = local_sweep if local_sweep is not None else (
         lambda ext: apply_stencil(ext, spec))
-    band_step = dstencil.make_sharded_step(mesh, spec, sweep,
+    band_step = dstencil.make_sharded_step(mesh, spec,
+                                           dstencil.masked_block(sweep),
                                            row_axis=row_axis,
                                            col_axis=col_axis, t=depth)
 

@@ -16,14 +16,20 @@ Scheme per exchange, for ``t`` sweeps of a radius-``r`` spec:
 * on physical domain edges substitute the Dirichlet bands, replicated
   outward across the halo band (cells beyond the first ``r`` ring are pinned
   and never influence the valid region);
-* run ``t`` masked local sweeps — Dirichlet cells are re-pinned between
-  sweeps so fixed boundaries stay fixed while the valid region shrinks by
-  ``r`` per sweep into the halo;
+* advance the extended block ``t`` sweeps via a *block callable*
+  ``block(ext, fixed, t)`` — either :func:`masked_block` (any single-sweep
+  policy looped with Dirichlet re-pinning between sweeps) or a fused
+  kernel that takes the pin mask itself (``engine.stencil_temporal`` with
+  ``mask=``: all ``t`` sweeps in one fast-memory round-trip, the real
+  communication-avoiding payoff);
 * crop the exact central block.
 
 One exchange per ``t`` sweeps is the communication-avoiding schedule the
 paper's PCIe-isolated Grayskull cards could not run (§VII); over a real mesh
-the halos travel on ICI/DCI and the answer is exact.
+the halos travel on ICI/DCI and the answer is exact. How many exchanges a
+full run costs comes from the shared :class:`~repro.engine.schedule.
+SweepSchedule` — the same object ``engine.run`` executes — so the two
+executors cannot drift.
 
 Corners: shard-corner halos are transported by the two-phase exchange, and
 the four ``r x r`` *physical* ring corners (which band decomposition drops)
@@ -60,8 +66,25 @@ def _pad_outward(band: jax.Array, d: int, axis: int, leading: bool):
     return jnp.concatenate(parts, axis=axis)
 
 
+def masked_block(sweep: Callable) -> Callable:
+    """Lift a single-sweep callable into the block contract.
+
+    ``block(ext, fixed, t)`` advances the extended block ``t`` sweeps,
+    re-pinning the ``fixed`` (global-Dirichlet) cells to their pre-sweep
+    values between sweeps — one kernel launch per sweep, fast memory
+    round-tripped every time. Fused policies skip this wrapper and take
+    the mask directly, which is the whole point of temporal blocking.
+    """
+    def block(ext, fixed, t: int):
+        orig = ext
+        for _ in range(t):
+            ext = jnp.where(fixed, orig, sweep(ext))
+        return ext
+    return block
+
+
 def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
-                  sweep: Callable, row_axis: str, col_axis: str,
+                  block: Callable, row_axis: str, col_axis: str,
                   px: int, py: int, r: int, t: int):
     """Advance the local shard by ``t`` sweeps with one depth-``t*r``
     exchange. Bands are local slices of the global Dirichlet bands;
@@ -103,38 +126,42 @@ def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
     # substitute the true r x r corner blocks on the four corner shards.
     rows_top, rows_bot = slice(d - r, d), slice(hl + d, hl + d + r)
     cols_lef, cols_rig = slice(d - r, d), slice(wl + d, wl + d + r)
-    for cond, block, rs, cs in (
+    for cond, corner, rs, cs in (
         ((ix == 0) & (iy == 0), tl, rows_top, cols_lef),
         ((ix == 0) & (iy == py - 1), tr, rows_top, cols_rig),
         ((ix == px - 1) & (iy == 0), bl, rows_bot, cols_lef),
         ((ix == px - 1) & (iy == py - 1), br, rows_bot, cols_rig),
     ):
-        ext = jnp.where(cond, ext.at[rs, cs].set(block.astype(u.dtype)), ext)
+        ext = jnp.where(cond, ext.at[rs, cs].set(corner.astype(u.dtype)), ext)
 
-    # Masked sweeps: physical Dirichlet bands stay pinned; everything the
-    # sweep leaves stale (its own outer ring) is halo that gets cropped.
-    orig = ext
+    # The pin mask: physical Dirichlet bands stay fixed across all t
+    # sweeps; every other edge cell is exchanged halo that must evolve
+    # (its staleness grows r per sweep and is cropped below).
     rr = jnp.arange(hl + 2 * d)[:, None]
     cc = jnp.arange(wl + 2 * d)[None, :]
     fixed = (((ix == 0) & (rr < d)) | ((ix == px - 1) & (rr >= hl + d))
              | ((iy == 0) & (cc < d)) | ((iy == py - 1) & (cc >= wl + d)))
-    for _ in range(t):
-        ext = jnp.where(fixed, orig, sweep(ext))
+    ext = block(ext, fixed, t)
     return ext[d:-d, d:-d]
 
 
-def make_sharded_step(mesh, spec: StencilSpec, sweep: Callable, *,
+def make_sharded_step(mesh, spec: StencilSpec, block: Callable, *,
                       row_axis: str | None, col_axis: str | None,
                       t: int = 1) -> Callable:
     """Build ``step(interior, bc) -> interior'`` advancing ``t`` sweeps of
-    ``spec`` with one halo exchange, sharded over ``mesh``."""
+    ``spec`` with one halo exchange, sharded over ``mesh``.
+
+    ``block(ext, fixed, t)`` is the local computation on the extended
+    (haloed) shard — wrap a plain single-sweep callable with
+    :func:`masked_block`.
+    """
     px = mesh.shape[row_axis] if row_axis else 1
     py = mesh.shape[col_axis] if col_axis else 1
     row_axis = row_axis or "_row_unused"
     col_axis = col_axis or "_col_unused"
 
     fn = functools.partial(
-        _local_sweeps, sweep=sweep, row_axis=row_axis, col_axis=col_axis,
+        _local_sweeps, block=block, row_axis=row_axis, col_axis=col_axis,
         px=px, py=py, r=spec.radius, t=t)
 
     row = row_axis if px > 1 else None
@@ -187,12 +214,20 @@ def extended_shard_shape(shape, mesh, spec: StencilSpec, *, t: int = 1,
     return ((shape[0] - 2 * r) // px + d, (shape[1] - 2 * r) // py + d)
 
 
-def run_sharded(u: jax.Array, spec: StencilSpec, mesh, sweep: Callable, *,
-                iters: int, t: int = 1, row_axis: str | None = None,
-                col_axis: str | None = None) -> jax.Array:
-    """Advance a ringed grid by exactly ``iters`` sweeps of ``spec`` over
-    ``mesh``, ``t`` sweeps per halo exchange. Same contract as
-    ``engine.run``: returns the full grid, boundary ring copied through."""
+def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
+                schedule, row_axis: str | None = None,
+                col_axis: str | None = None,
+                remainder_block: Callable | None = None) -> jax.Array:
+    """Execute a :class:`~repro.engine.schedule.SweepSchedule` over ``mesh``.
+
+    ``schedule.fused_blocks`` exchanges of depth ``schedule.halo_depth``
+    each precede ``schedule.t`` local sweeps via ``block(ext, fixed, t)``;
+    a non-empty remainder runs one more (shallower) exchange through
+    ``remainder_block`` (default: ``block`` again). Same contract as
+    ``engine.run``: returns the full grid, boundary ring copied through.
+    The iters/t/remainder arithmetic lives in the schedule — this function
+    only spends exchanges.
+    """
     row_axis, col_axis = resolve_axes(mesh, row_axis, col_axis)
     r = spec.radius
     hi, wi = u.shape[0] - 2 * r, u.shape[1] - 2 * r
@@ -202,19 +237,20 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, sweep: Callable, *,
 
     interior, bc = split_ringed_bands(u, r)
     bc = dict(bc, tl=u[:r, :r], tr=u[:r, -r:], bl=u[-r:, :r], br=u[-r:, -r:])
-    t_eff = max(1, min(t, iters))
-    nfull, rem = divmod(iters, t_eff)
 
-    if nfull:
-        step = make_sharded_step(mesh, spec, sweep, row_axis=row_axis,
-                                 col_axis=col_axis, t=t_eff)
+    if schedule.fused_blocks:
+        step = make_sharded_step(mesh, spec, block, row_axis=row_axis,
+                                 col_axis=col_axis, t=schedule.t)
 
         def body(v, _):
             return step(v, bc), None
 
-        interior, _ = jax.lax.scan(body, interior, None, length=nfull)
-    if rem:
-        step_rem = make_sharded_step(mesh, spec, sweep, row_axis=row_axis,
-                                     col_axis=col_axis, t=rem)
+        interior, _ = jax.lax.scan(body, interior, None,
+                                   length=schedule.fused_blocks)
+    if schedule.remainder:
+        step_rem = make_sharded_step(
+            mesh, spec, remainder_block if remainder_block is not None
+            else block, row_axis=row_axis, col_axis=col_axis,
+            t=schedule.remainder)
         interior = step_rem(interior, bc)
     return u.at[r:-r, r:-r].set(interior)

@@ -21,9 +21,10 @@ plans are validated against that device's fast-memory budget and the
 device the host backend is detected.
 
 Layers: ``device`` (hardware models + registry), ``plan`` (block/window/
-temporal-depth planning, cached per device), ``policies`` (the Pallas
-kernels), ``dispatch`` (registry + run/step), ``tune`` (measured
-autotuner behind ``policy="tuned"``).
+temporal-depth planning, cached per device), ``schedule`` (how ``iters``
+sweeps become fused blocks + halo exchanges — shared by every executor),
+``policies`` (the Pallas kernels), ``dispatch`` (registry + run/step),
+``tune`` (measured autotuner behind ``policy="tuned"``).
 """
 from repro.engine.device import (  # noqa: F401
     DeviceModel,
@@ -49,6 +50,12 @@ from repro.engine.policies import (  # noqa: F401
     stencil_shifted,
     stencil_temporal,
 )
+from repro.engine.schedule import (  # noqa: F401
+    DEFAULT_REMAINDER_POLICY,
+    SweepSchedule,
+    build_schedule,
+    effective_depth,
+)
 from repro.engine.dispatch import (  # noqa: F401
     Policy,
     available_policies,
@@ -59,4 +66,8 @@ from repro.engine.dispatch import (  # noqa: F401
     run,
     step,
 )
-from repro.engine.distributed import run_distributed  # noqa: F401
+from repro.engine.distributed import (  # noqa: F401
+    local_sweep_for,
+    plan_distributed,
+    run_distributed,
+)

@@ -20,10 +20,8 @@ from repro.core.stencil import StencilSpec, jacobi_2d_5pt
 from repro.engine import policies as P
 from repro.engine.device import DeviceModel, get_device
 from repro.engine.plan import DEFAULT_T, PlanError, plan_for
-
-#: Non-fused policy used for the leftover sweeps when ``iters`` is not a
-#: multiple of the temporal depth.
-DEFAULT_REMAINDER_POLICY = "rowchunk"
+from repro.engine.schedule import DEFAULT_REMAINDER_POLICY  # noqa: F401
+from repro.engine.schedule import build_schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,7 +111,8 @@ def _on_tpu() -> bool:
 
 def resolve_auto(shape, dtype, spec: StencilSpec, *, iters: int = 1,
                  t: int | None = None,
-                 device: str | DeviceModel | None = None) -> str:
+                 device: str | DeviceModel | None = None,
+                 masked: bool = False) -> str:
     """Pick a policy from a fast-memory/traffic heuristic for ``device``.
 
     Temporal blocking wins whenever several sweeps can amortize one HBM
@@ -123,12 +122,15 @@ def resolve_auto(shape, dtype, spec: StencilSpec, *, iters: int = 1,
     plain rowchunk. The crossover points therefore move with the device:
     a window that fits 16 MiB of v5e VMEM can overflow the 1.5 MiB Tensix
     SRAM of ``grayskull_e150``, demoting temporal -> dbuf -> shifted.
+    ``masked`` probes the temporal candidate in its masked
+    (distributed-shard) form, whose pin-mask stream costs extra fast
+    memory — the form the distributed executor will actually launch.
     """
     t_eff = t if t is not None else min(DEFAULT_T, max(iters, 1))
     if iters >= 2 and t_eff >= 2:
         try:
             plan_for(shape, dtype, spec, "temporal", t=min(t_eff, iters),
-                     device=device)
+                     device=device, masked=masked)
             return "temporal"
         except PlanError:
             pass
@@ -193,41 +195,30 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
     ``policy`` is a registry name, ``"auto"`` (device-aware heuristic), or
     ``"tuned"`` (measured winner from the autotune cache). ``device`` is a
     registry name or :class:`DeviceModel`; plans are validated against its
-    fast-memory budget (None = the detected host backend). For the temporal
-    policy, full ``t``-deep fused blocks cover ``iters // t`` round-trips
-    and the leftover ``iters % t`` sweeps run under ``remainder_policy``
-    (a non-fused registry policy), so any iteration count is valid.
+    fast-memory budget (None = the detected host backend). Scheduling —
+    policy resolution, fusion-depth clamping, the ``iters // t`` fused
+    blocks plus an ``iters % t`` remainder under ``remainder_policy`` — is
+    all :func:`repro.engine.schedule.build_schedule`; this function just
+    executes the schedule as kernel launches.
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
         interpret = not _on_tpu()
     device = _resolve_device_name(device)
-    if policy == "auto":
-        policy = resolve_auto(u.shape, u.dtype, spec, iters=iters, t=t,
-                              device=device)
-    elif policy == "tuned":
-        from repro.engine import tune  # deferred: tune dispatches back here
-        policy = tune.best_policy(u.shape, u.dtype, spec, iters=iters, t=t,
-                                  bm=bm, interpret=interpret, device=device)
-    p = get_policy(policy)
-
+    sched = build_schedule(iters, spec=spec, shape=u.shape, dtype=u.dtype,
+                           policy=policy, t=t, bm=bm, interpret=interpret,
+                           device=device, remainder_policy=remainder_policy)
+    p = get_policy(sched.policy)
     if p.fused:
-        if t is not None and t < 1:
-            raise PlanError(f"temporal depth t={t} must be >= 1")
-        t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
-        nfull, rem = divmod(iters, t_eff)
         u = _scan_steps(u, functools.partial(
-            p.fn, spec=spec, bm=bm, t=t_eff, interpret=interpret,
-            device=device), nfull)
-        if rem:
-            rp = get_policy(remainder_policy)
-            if rp.fused:
-                raise ValueError(
-                    f"remainder_policy {remainder_policy!r} must be non-fused")
+            p.fn, spec=spec, bm=bm, t=sched.t, interpret=interpret,
+            device=device), sched.fused_blocks)
+        if sched.remainder:
+            rp = get_policy(sched.remainder_policy)
             u = _scan_steps(u, functools.partial(
                 rp.fn, spec=spec, bm=bm, interpret=interpret,
-                device=device), rem)
+                device=device), sched.remainder)
         return u
-
     return _scan_steps(u, functools.partial(
-        p.fn, spec=spec, bm=bm, interpret=interpret, device=device), iters)
+        p.fn, spec=spec, bm=bm, interpret=interpret, device=device),
+        sched.iters)

@@ -7,6 +7,12 @@ runs the *local* computation through the same policy registry ``engine.run``
 uses — so the paper's §VII multi-card scaling composes with every kernel
 generation instead of the hard-coded 5-point Jacobi.
 
+Scheduling is shared with ``engine.run``: both executors run a
+:class:`~repro.engine.schedule.SweepSchedule` (``t`` sweeps per fused
+block/halo exchange, remainder under a non-fused policy), built once by
+:func:`plan_distributed` — inspect it to see the exchange count a run will
+cost before paying for it.
+
 Per-shard plans are validated against the target
 :class:`~repro.engine.device.DeviceModel` *before* anything is sharded: the
 static local block (shard interior + exchanged halo, from
@@ -14,11 +20,14 @@ static local block (shard interior + exchanged halo, from
 budget, so an over-deep fusion depth on a small-SRAM device fails fast with
 the device's numbers in the message instead of mid-trace inside shard_map.
 
-The local sweep obeys the registry contract (one sweep per call, f32 tap
-accumulation in fixed tap order), so the distributed result is bit-identical
-to the single-device ``engine.run`` oracle in fp32 for face/row-neighbour
-specs. Fused policies (``temporal``) run their single-sweep degenerate per
-shard: the ``t``-deep halo exchange *is* the temporal blocking at mesh scale.
+The local sweep obeys the registry contract (f32 tap accumulation in fixed
+tap order), so the distributed result is bit-identical to the single-device
+``engine.run`` oracle in fp32. Fused policies run *fused* per shard: the
+``temporal`` kernel takes the shard's pin mask (only the slice of the global
+Dirichlet ring the shard owns stays fixed — exchanged halo evolves) and
+advances all ``t`` sweeps in one fast-memory round-trip between exchanges —
+the communication-avoiding schedule at mesh scale, not its single-sweep
+degenerate.
 """
 from __future__ import annotations
 
@@ -29,41 +38,99 @@ from repro.engine.device import DeviceModel
 from repro.engine.dispatch import (_on_tpu, _resolve_device_name, get_policy,
                                    resolve_auto)
 from repro.engine.plan import plan_for
+from repro.engine.schedule import (DEFAULT_REMAINDER_POLICY, SweepSchedule,
+                                   build_schedule, effective_depth)
+
+
+def _mesh_shape(mesh, row_axis: str | None, col_axis: str | None) -> tuple:
+    """The decomposition shape folded into tuned cache keys — derived in
+    exactly one place so the key built at schedule time and the one passed
+    to ``local_sweep_for`` can never diverge."""
+    return tuple(mesh.shape[a] for a in (row_axis, col_axis)
+                 if a is not None)
 
 
 def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
-                    dtype, bm: int | None = None, interpret: bool = False,
+                    dtype, iters: int = 1, t: int = 1,
+                    bm: int | None = None, interpret: bool = False,
                     device: str | None = None,
                     mesh_shape: tuple | None = None):
-    """Resolve a policy name to a single-sweep callable on extended shards.
+    """Resolve a policy name to a block callable on extended shards.
+
+    The returned ``block(ext, fixed, t)`` advances an extended shard ``t``
+    sweeps, keeping the ``fixed`` cells (the shard's slice of the global
+    Dirichlet ring) pinned: fused policies pass the mask straight into the
+    kernel and run all ``t`` sweeps in one fast-memory round-trip;
+    non-fused policies loop single sweeps with re-pinning in between
+    (:func:`repro.dist.stencil.masked_block`).
 
     ``"reference"`` selects the pure-jnp oracle; ``"auto"`` consults the
     planner and ``"tuned"`` the measured autotune cache, both against the
-    (static) extended shard shape on ``device`` — the shard, not the global
-    grid, is what the local kernel actually runs on (``mesh_shape`` folds
-    the decomposition into the tuned cache key so local and distributed
-    winners never alias). For registry policies the shard plan is resolved
-    eagerly here, surfacing device-budget violations before shard_map
-    tracing starts.
+    (static) extended shard shape on ``device`` at the *real* ``iters``
+    and ``t`` — the schedule the shard will actually run, not the ``t=1``
+    degenerate (``mesh_shape`` folds the decomposition into the tuned
+    cache key so local and distributed winners never alias). For registry
+    policies the shard plan is resolved eagerly here, surfacing
+    device-budget violations before shard_map tracing starts.
     """
+    from repro.dist.stencil import masked_block
+
     if policy == "reference":
-        return lambda ext: apply_stencil(ext, spec)
+        return masked_block(lambda ext: apply_stencil(ext, spec))
     if policy == "auto":
-        policy = resolve_auto(shard_shape, dtype, spec, iters=1, t=1,
-                              device=device)
+        policy = resolve_auto(shard_shape, dtype, spec, iters=iters, t=t,
+                              device=device, masked=True)
     elif policy == "tuned":
         from repro.engine import tune  # deferred: tune dispatches back here
-        policy = tune.best_policy(shard_shape, dtype, spec, iters=1, t=1,
+        policy = tune.best_policy(shard_shape, dtype, spec, iters=iters, t=t,
                                   bm=bm, interpret=interpret, device=device,
-                                  mesh=mesh_shape)
+                                  mesh=mesh_shape, masked=True)
     p = get_policy(policy)
-    plan_for(shard_shape, dtype, spec, policy, bm=bm,
-             t=1 if p.fused else None, device=device)
     if p.fused:
-        return lambda ext: p.fn(ext, spec, bm=bm, t=1, interpret=interpret,
-                                device=device)
-    return lambda ext: p.fn(ext, spec, bm=bm, interpret=interpret,
-                            device=device)
+        plan_for(shard_shape, dtype, spec, policy, bm=bm, t=t, device=device,
+                 masked=True)
+        return lambda ext, fixed, tt: p.fn(ext, spec, bm=bm, t=tt,
+                                           interpret=interpret, device=device,
+                                           mask=fixed)
+    plan_for(shard_shape, dtype, spec, policy, bm=bm, device=device)
+    return masked_block(lambda ext: p.fn(ext, spec, bm=bm,
+                                         interpret=interpret, device=device))
+
+
+def plan_distributed(shape, dtype, spec: StencilSpec | None = None, *,
+                     mesh, policy: str = "auto", iters: int = 1, t: int = 1,
+                     bm: int | None = None, row_axis: str | None = None,
+                     col_axis: str | None = None,
+                     interpret: bool | None = None,
+                     device: str | DeviceModel | None = None,
+                     remainder_policy: str = DEFAULT_REMAINDER_POLICY
+                     ) -> tuple[SweepSchedule, tuple[int, int], tuple]:
+    """Resolve what a ``run_distributed`` call will execute, without running.
+
+    Returns ``(schedule, shard_shape, (row_axis, col_axis))``: the shared
+    :class:`SweepSchedule` (resolved policy, realized ``t``, fused blocks,
+    remainder, and — the mesh-scale quantity — ``schedule.exchanges`` halo
+    exchanges of depth ``schedule.halo_depth``), plus the static extended
+    shard shape per-shard plans are validated against. ``run_distributed``
+    itself goes through here, so inspection and execution cannot disagree.
+    """
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    if interpret is None:
+        interpret = not _on_tpu()
+    from repro.dist import stencil as dstencil
+
+    row_axis, col_axis = dstencil.resolve_axes(mesh, row_axis, col_axis)
+    t_eff = effective_depth(iters, t)
+    shard_shape = dstencil.extended_shard_shape(
+        shape, mesh, spec, t=t_eff, row_axis=row_axis, col_axis=col_axis)
+    mesh_shape = _mesh_shape(mesh, row_axis, col_axis)
+    sched = build_schedule(iters, spec=spec, shape=shard_shape, dtype=dtype,
+                           policy=policy, t=t, bm=bm, interpret=interpret,
+                           device=_resolve_device_name(device),
+                           mesh_shape=mesh_shape,
+                           remainder_policy=remainder_policy,
+                           exchange_cadence=True)
+    return sched, shard_shape, (row_axis, col_axis)
 
 
 def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
@@ -71,16 +138,23 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
                     bm: int | None = None, row_axis: str | None = None,
                     col_axis: str | None = None,
                     interpret: bool | None = None,
-                    device: str | DeviceModel | None = None) -> jax.Array:
+                    device: str | DeviceModel | None = None,
+                    remainder_policy: str = DEFAULT_REMAINDER_POLICY
+                    ) -> jax.Array:
     """Advance a ringed grid by ``iters`` sweeps of ``spec`` over ``mesh``.
 
     Same contract and return as ``engine.run`` (full grid, ring copied
     through), decomposed rows x cols over ``(row_axis, col_axis)`` (defaults:
     the mesh's first/second axes). ``t`` sweeps run per halo exchange
-    (depth-``t*r`` halos — the communication-avoiding schedule); ``policy``
-    is any registry name, ``"reference"`` (pure jnp), ``"auto"``, or
-    ``"tuned"``; ``device`` selects the device model each shard's plan is
-    validated against (None = the detected host backend).
+    (depth-``t*r`` halos — the communication-avoiding schedule; a ``t``
+    that must be clamped to ``iters`` warns, like ``pick_bm`` does for a
+    degraded block size); fused policies run all ``t`` sweeps in one
+    kernel invocation per shard. ``policy`` is any registry name,
+    ``"reference"`` (pure jnp), ``"auto"``, or ``"tuned"``; ``device``
+    selects the device model each shard's plan is validated against (None
+    = the detected host backend); leftover ``iters % t`` sweeps run under
+    ``remainder_policy`` when the main policy is fused, exactly like
+    ``engine.run``.
     """
     from repro.dist import stencil as dstencil
 
@@ -88,14 +162,23 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
     if interpret is None:
         interpret = not _on_tpu()
     device = _resolve_device_name(device)
-    row_axis, col_axis = dstencil.resolve_axes(mesh, row_axis, col_axis)
-    t_eff = max(1, min(t, iters))
-    shard_shape = dstencil.extended_shard_shape(
-        u.shape, mesh, spec, t=t_eff, row_axis=row_axis, col_axis=col_axis)
-    mesh_shape = tuple(mesh.shape[a] for a in (row_axis, col_axis)
-                       if a is not None)
-    sweep = local_sweep_for(policy, spec, shard_shape=shard_shape,
-                            dtype=u.dtype, bm=bm, interpret=interpret,
-                            device=device, mesh_shape=mesh_shape)
-    return dstencil.run_sharded(u, spec, mesh, sweep, iters=iters, t=t_eff,
-                                row_axis=row_axis, col_axis=col_axis)
+    sched, shard_shape, (row_axis, col_axis) = plan_distributed(
+        u.shape, u.dtype, spec, mesh=mesh, policy=policy, iters=iters, t=t,
+        bm=bm, row_axis=row_axis, col_axis=col_axis, interpret=interpret,
+        device=device, remainder_policy=remainder_policy)
+    mesh_shape = _mesh_shape(mesh, row_axis, col_axis)
+    block = local_sweep_for(sched.policy, spec, shard_shape=shard_shape,
+                            dtype=u.dtype, iters=iters, t=sched.t, bm=bm,
+                            interpret=interpret, device=device,
+                            mesh_shape=mesh_shape)
+    remainder_block = None
+    if sched.remainder and sched.remainder_policy != sched.policy:
+        # Fused main policy with leftovers: the shallower remainder
+        # exchange runs the non-fused remainder policy per shard.
+        remainder_block = local_sweep_for(
+            sched.remainder_policy, spec, shard_shape=shard_shape,
+            dtype=u.dtype, iters=sched.remainder, t=sched.remainder, bm=bm,
+            interpret=interpret, device=device, mesh_shape=mesh_shape)
+    return dstencil.run_sharded(u, spec, mesh, block, schedule=sched,
+                                row_axis=row_axis, col_axis=col_axis,
+                                remainder_block=remainder_block)

@@ -77,6 +77,11 @@ class ExecutionPlan:
     window_rows: int
     vmem_bytes: int
     device: DeviceModel
+    #: Temporal only: the kernel streams a per-cell pin mask alongside the
+    #: grid (distributed shards pin the *global* Dirichlet ring, not the
+    #: whole block edge). Changes the fast-memory footprint, so it is part
+    #: of the plan, and the lowering emits the mask stream from it.
+    masked: bool = False
 
     @property
     def radius(self) -> int:
@@ -104,7 +109,7 @@ class ExecutionPlan:
 
 
 def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
-                     bm: int, t: int) -> tuple[int, int]:
+                     bm: int, t: int, masked: bool = False) -> tuple[int, int]:
     """Fast-memory window height and total scratch/operand footprint."""
     h, w = shape
     r = spec.radius
@@ -124,8 +129,11 @@ def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
         win = min(bm + 2 * t * r, h)
         # The t in-flight sweeps run on an f32 copy of the window (4B/elt,
         # two live buffers under fori_loop), plus the stored window and the
-        # write-back staging block.
+        # write-back staging block. A masked run streams the pin mask
+        # through a second window-sized scratch buffer.
         vmem = win * w * (dtype_bytes + 8) + bm * w * dtype_bytes
+        if masked:
+            vmem += win * w * dtype_bytes
     else:
         raise PlanError(f"unknown policy {policy!r}")
     return win, vmem
@@ -134,7 +142,7 @@ def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
 @functools.lru_cache(maxsize=1024)
 def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
                  policy: str, bm_req: int, t: int,
-                 device: DeviceModel) -> ExecutionPlan:
+                 device: DeviceModel, masked: bool) -> ExecutionPlan:
     h, w = shape
     r = spec.radius
     if spec.ndim != 2:
@@ -144,10 +152,13 @@ def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
         raise PlanError(f"grid {shape} too small for stencil radius {r}")
     if t < 1:
         raise PlanError(f"temporal depth t={t} must be >= 1")
+    if masked and policy != "temporal":
+        raise PlanError(f"policy {policy!r} takes no pin mask; only the "
+                        f"temporal kernel streams one")
     hi = h - 2 * r
     bm = pick_bm(hi, bm_req)
     win, vmem = _window_and_vmem(policy, shape, jnp.dtype(dtype).itemsize,
-                                 spec, bm, t)
+                                 spec, bm, t, masked)
     if vmem > device.fast_memory_bytes:
         raise PlanError(
             f"policy {policy!r} needs ~{vmem / 2**20:.2f} MiB of fast memory "
@@ -156,23 +167,26 @@ def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
             f"or plan for a device with more fast memory")
     return ExecutionPlan(policy=policy, shape=shape, dtype=dtype, spec=spec,
                          bm=bm, t=t, window_rows=win, vmem_bytes=vmem,
-                         device=device)
+                         device=device, masked=masked)
 
 
 def plan_for(shape, dtype, spec: StencilSpec, policy: str, *,
              bm: int | None = None, t: int | None = None,
-             device: str | DeviceModel | None = None) -> ExecutionPlan:
+             device: str | DeviceModel | None = None,
+             masked: bool = False) -> ExecutionPlan:
     """Resolve (and cache) an :class:`ExecutionPlan` for static arguments.
 
     ``bm``/``t`` are requests; the plan holds the realized values (``bm`` is
     snapped to the largest interior-row divisor, ``t`` is forced to 1 for
     non-temporal policies). ``device`` is a registry name or model; None
     plans against the detected host backend (``device.detect()``).
+    ``masked`` plans the temporal kernel's explicit pin-mask stream (the
+    distributed shard form).
     """
     t_eff = (t if t is not None else DEFAULT_T) if policy == "temporal" else 1
     return _plan_cached(tuple(int(s) for s in shape), jnp.dtype(dtype).name,
                         spec, policy, int(bm if bm is not None else DEFAULT_BM),
-                        int(t_eff), get_device(device))
+                        int(t_eff), get_device(device), bool(masked))
 
 
 def plan_cache_info():

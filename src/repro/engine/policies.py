@@ -230,22 +230,36 @@ def stencil_dbuf(u: jax.Array, spec: StencilSpec, *, bm: int | None = None,
 # temporal — T sweeps fused per HBM round-trip (beyond paper)
 # ---------------------------------------------------------------------------
 
-def _temporal_kernel(u_hbm, o_hbm, scratch, out_scr, in_sem, out_sem,
-                     *, bm: int, t: int, r: int, h: int, w: int,
-                     offsets, weights):
+def _temporal_kernel(*refs, bm: int, t: int, r: int, h: int, w: int,
+                     offsets, weights, masked: bool):
+    if masked:
+        (u_hbm, m_hbm, o_hbm, scratch, m_scr, out_scr,
+         in_sem, m_sem, out_sem) = refs
+    else:
+        u_hbm, o_hbm, scratch, out_scr, in_sem, out_sem = refs
     i = pl.program_id(0)
     win = scratch.shape[0]  # loaded rows (whole grid if the halo overflows)
     # Clamp the window inside the array; remember where it starts globally.
     ws = jnp.clip(i * bm + r - t * r, 0, h - win)
     cp = pltpu.make_async_copy(u_hbm.at[pl.ds(ws, win), :], scratch, in_sem)
     cp.start()
+    if masked:
+        mcp = pltpu.make_async_copy(m_hbm.at[pl.ds(ws, win), :], m_scr, m_sem)
+        mcp.start()
     cp.wait()
 
     c0 = scratch[...].astype(jnp.float32)
-    # Mask pinning global Dirichlet cells: the r-deep ring of the grid.
-    grow = ws + jax.lax.broadcasted_iota(jnp.int32, (win, w), 0)
-    gcol = jax.lax.broadcasted_iota(jnp.int32, (win, w), 1)
-    fixed = (grow < r) | (grow >= h - r) | (gcol < r) | (gcol >= w - r)
+    if masked:
+        # Explicit pin mask (nonzero = Dirichlet): on a distributed shard
+        # only the *global* ring is pinned — exchanged halo cells must
+        # evolve with the fused sweeps or the fusion is fake.
+        mcp.wait()
+        fixed = m_scr[...] != 0
+    else:
+        # Mask pinning global Dirichlet cells: the r-deep ring of the grid.
+        grow = ws + jax.lax.broadcasted_iota(jnp.int32, (win, w), 0)
+        gcol = jax.lax.broadcasted_iota(jnp.int32, (win, w), 1)
+        fixed = (grow < r) | (grow >= h - r) | (gcol < r) | (gcol >= w - r)
 
     def sweep(_, c):
         acc = None
@@ -271,27 +285,46 @@ def _temporal_kernel(u_hbm, o_hbm, scratch, out_scr, in_sem, out_sem,
                    static_argnames=("spec", "t", "bm", "interpret", "device"))
 def stencil_temporal(u: jax.Array, spec: StencilSpec, *, t: int | None = None,
                      bm: int | None = None, interpret: bool = False,
-                     device: "str | DeviceModel | None" = None) -> jax.Array:
-    """Advance the grid by exactly ``t`` sweeps in one HBM round-trip."""
+                     device: "str | DeviceModel | None" = None,
+                     mask: jax.Array | None = None) -> jax.Array:
+    """Advance the grid by exactly ``t`` sweeps in one HBM round-trip.
+
+    ``mask`` (optional, same shape as ``u``, nonzero = pinned) overrides
+    the default Dirichlet set: without it the grid's own radius-``r`` ring
+    is re-pinned between sweeps; with it only the masked cells are. This
+    is what lets a distributed shard run *true* fused sweeps — its block
+    edge is mostly exchanged halo that must evolve, and only the slice of
+    the global ring it owns stays fixed. Unmasked cells within ``t·r`` of
+    an unpinned edge come back stale/garbage (their dependency cone left
+    the block); callers crop them, exactly as they crop exchanged halo.
+    """
+    masked = mask is not None
     plan = plan_for(u.shape, u.dtype, spec, "temporal", bm=bm, t=t,
-                    device=device)
+                    device=device, masked=masked)
     r = plan.radius
     h, w = u.shape
+    operands = [u]
+    scratch = [pltpu.VMEM((plan.window_rows, w), u.dtype)]
+    sems = [pltpu.SemaphoreType.DMA]
+    if masked:
+        # The mask rides the same DMA machinery as the grid (its own
+        # window scratch + semaphore), cast to the grid dtype so 0/1
+        # survive any registry dtype exactly.
+        operands.append(mask.astype(u.dtype))
+        scratch.append(pltpu.VMEM((plan.window_rows, w), u.dtype))
+        sems.append(pltpu.SemaphoreType.DMA)
     out = pl.pallas_call(
         functools.partial(_temporal_kernel, bm=plan.bm, t=plan.t, r=r, h=h,
-                          w=w, offsets=spec.offsets, weights=spec.weights),
+                          w=w, offsets=spec.offsets, weights=spec.weights,
+                          masked=masked),
         grid=(plan.nblocks,),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(operands),
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         out_shape=jax.ShapeDtypeStruct((h, w), u.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((plan.window_rows, w), u.dtype),
-            pltpu.VMEM((plan.bm, w), u.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=scratch + [pltpu.VMEM((plan.bm, w), u.dtype)]
+        + sems + [pltpu.SemaphoreType.DMA],
         interpret=interpret,
-    )(u)
+    )(*operands)
     # The top/bottom r boundary rows are never written by the kernel;
     # restore them (columns are pinned by the fixed-cell mask).
     out = out.at[:r, :].set(u[:r, :]).at[h - r:, :].set(u[h - r:, :])

@@ -1,0 +1,172 @@
+"""Sweep scheduling: how ``iters`` sweeps become fused blocks + exchanges.
+
+Every executor used to re-derive the same bookkeeping — clamp the fusion
+depth to the iteration count, split ``iters`` into ``iters // t`` fused
+blocks plus an ``iters % t`` remainder, pick a non-fused policy for the
+leftovers — once in ``engine.run``, once in ``engine.run_distributed`` /
+``dist.stencil.run_sharded``, once in ``backends.sim.simulate``. Three
+hand-rolled copies of the same arithmetic is how schedules drift; this
+module is the single derivation.
+
+A :class:`SweepSchedule` is the frozen answer: the resolved policy (after
+``"auto"``/``"tuned"`` lookup), the realized fusion depth ``t``, how many
+full-depth blocks run, how many remainder sweeps follow under which
+non-fused policy, and — the quantity that matters at mesh scale — how many
+halo exchanges the whole thing costs and how deep each halo band is
+(``t * r``). ``engine.run`` executes a schedule as kernel launches;
+``run_distributed`` executes the *same* schedule as ``exchange + t local
+sweeps`` rounds, which is the paper's §VII communication-avoiding
+direction made inspectable: ``build_schedule(iters=512, t=8, ...)`` says
+"64 exchanges instead of 512" before anything runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from repro.core.stencil import StencilSpec
+from repro.engine.device import DeviceModel
+from repro.engine.plan import DEFAULT_T, PlanError
+
+#: Non-fused policy used for the leftover sweeps when ``iters`` is not a
+#: multiple of the temporal depth.
+DEFAULT_REMAINDER_POLICY = "rowchunk"
+
+
+def effective_depth(iters: int, t: int | None,
+                    default: int = DEFAULT_T) -> int:
+    """The realized fusion depth: the request clamped into ``[1, iters]``.
+
+    The single home of the clamp every executor used to hand-roll
+    (``min(t or DEFAULT_T, max(iters, 1))``). Callers that need the depth
+    before building a full schedule (e.g. to size a shard's halo band)
+    use this; :func:`build_schedule` warns when an *explicit* request is
+    degraded, so the quiet path here stays quiet.
+    """
+    if t is not None and t < 1:
+        raise PlanError(f"temporal depth t={t} must be >= 1")
+    return min(t if t is not None else default, max(iters, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSchedule:
+    """How ``iters`` sweeps of a radius-``r`` spec actually execute.
+
+    ``fused_blocks`` blocks of ``t`` sweeps run under ``policy`` (one HBM
+    round-trip each when the policy is fused; one halo exchange each at
+    mesh scale), then ``remainder`` sweeps run under ``remainder_policy``
+    (a non-fused registry policy; equal to ``policy`` when the main policy
+    is itself non-fused). Frozen and hashable, so a schedule can key
+    caches and ride through jit closures like a plan does.
+    """
+
+    policy: str
+    iters: int
+    t: int
+    fused: bool
+    fused_blocks: int
+    remainder: int
+    remainder_policy: str
+    radius: int
+
+    def __post_init__(self):
+        assert self.fused_blocks * self.t + self.remainder == self.iters, self
+
+    @property
+    def exchanges(self) -> int:
+        """Halo exchanges a distributed execution of this schedule costs:
+        one per fused block plus one for the remainder round."""
+        return self.fused_blocks + (1 if self.remainder else 0)
+
+    @property
+    def halo_depth(self) -> int:
+        """Rows/cols of halo each full-depth exchange must carry (t·r)."""
+        return self.t * self.radius
+
+    @property
+    def remainder_halo_depth(self) -> int:
+        return self.remainder * self.radius
+
+    def describe(self) -> str:
+        parts = [f"{self.policy}: {self.iters} sweeps = "
+                 f"{self.fused_blocks} x t={self.t}"]
+        if self.remainder:
+            parts.append(f" + {self.remainder} ({self.remainder_policy})")
+        parts.append(f"; {self.exchanges} exchange"
+                     f"{'s' if self.exchanges != 1 else ''} "
+                     f"(halo depth {self.halo_depth})")
+        return "".join(parts)
+
+
+def build_schedule(iters: int, *, spec: StencilSpec, shape, dtype,
+                   policy: str = "auto", t: int | None = None,
+                   bm: int | None = None, interpret: bool = False,
+                   device: "str | DeviceModel | None" = None,
+                   mesh_shape: tuple | None = None,
+                   remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                   exchange_cadence: bool = False) -> SweepSchedule:
+    """Resolve ``(iters, t, policy)`` into a :class:`SweepSchedule`.
+
+    ``policy`` may be a registry name, ``"reference"`` (the pure-jnp
+    oracle, distributed callers only), ``"auto"`` (device-aware heuristic)
+    or ``"tuned"`` (measured winner) — the latter two are resolved here
+    against ``shape``/``dtype``/``device`` with the *real* ``iters`` and
+    ``t`` (and ``mesh_shape`` folded into the tuned cache key), so the
+    winner is chosen for the schedule that will actually run.
+
+    ``t`` groups sweeps into blocks for fused policies always, and for
+    non-fused policies only under ``exchange_cadence=True`` (the
+    distributed executor, where ``t`` is the sweeps-per-exchange knob
+    regardless of local fusion). An explicit ``t`` that must be clamped to
+    ``iters`` raises a ``UserWarning`` — silently degrading the requested
+    fusion depth is the same class of bug ``pick_bm`` warns about. A
+    fused ``remainder_policy`` is rejected exactly like ``engine.run``
+    always has.
+    """
+    if iters < 0:
+        raise PlanError(f"iters={iters} must be >= 0")
+    if policy == "auto":
+        from repro.engine.dispatch import resolve_auto
+        # Distributed executors launch fused policies in their masked
+        # (pin-mask-streaming) form; the candidate must be gated by the
+        # plan that will actually run, or auto crashes where it should
+        # demote.
+        policy = resolve_auto(shape, dtype, spec, iters=iters, t=t,
+                              device=device, masked=exchange_cadence)
+    elif policy == "tuned":
+        from repro.engine import tune  # deferred: tune dispatches back here
+        policy = tune.best_policy(shape, dtype, spec, iters=iters, t=t,
+                                  bm=bm, interpret=interpret, device=device,
+                                  mesh=mesh_shape, masked=exchange_cadence)
+    if policy == "reference":
+        fused = False
+    else:
+        from repro.engine.dispatch import get_policy
+        fused = get_policy(policy).fused
+
+    if fused or exchange_cadence:
+        t_eff = effective_depth(iters, t)
+        if t is not None and iters > 0 and t_eff < t:
+            warnings.warn(
+                f"requested fusion depth t={t} exceeds iters={iters}; "
+                f"running t={t_eff} sweeps per "
+                f"{'exchange' if exchange_cadence else 'fused block'} "
+                f"instead (the schedule cannot fuse sweeps that do not "
+                f"exist)", stacklevel=2)
+    else:
+        t_eff = 1
+    nfull, rem = divmod(iters, t_eff)
+
+    if fused:
+        if rem:
+            from repro.engine.dispatch import get_policy
+            if get_policy(remainder_policy).fused:
+                raise ValueError(
+                    f"remainder_policy {remainder_policy!r} must be "
+                    f"non-fused")
+        rp = remainder_policy
+    else:
+        rp = policy  # non-fused remainders re-run the main policy
+    return SweepSchedule(policy=policy, iters=iters, t=t_eff, fused=fused,
+                         fused_blocks=nfull, remainder=rem,
+                         remainder_policy=rp, radius=spec.radius)

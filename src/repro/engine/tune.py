@@ -36,6 +36,7 @@ from repro.core.stencil import StencilSpec
 from repro.engine.device import DeviceModel, get_device
 from repro.engine.dispatch import get_policy, registry
 from repro.engine.plan import DEFAULT_T, PlanError, plan_for
+from repro.engine.schedule import effective_depth
 
 #: Default on-disk location; override per call or via $REPRO_TUNE_CACHE.
 DEFAULT_CACHE_PATH = os.path.join(
@@ -58,14 +59,17 @@ def _cache_path(cache_path: str | None) -> str:
 
 def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
              t: int | None, bm: int | None, interpret: bool = True,
-             mesh: tuple | None = None) -> str:
+             mesh: tuple | None = None, masked: bool = False) -> str:
     """Stable cache key for one autotune cell.
 
     ``mesh`` is the decomposition shape when the caller is tuning a *shard*
     (``engine.run_distributed``): the same local shape can want a different
     winner under a different decomposition (halo bands change the window
     geometry), so single-device cells (``mesh=None`` -> ``mesh=local``)
-    and per-mesh cells never share winners.
+    and per-mesh cells never share winners. ``masked`` separates cells
+    whose fused candidates were gated by the masked (pin-mask-streaming)
+    plan — a winner measured without that gate must never satisfy a
+    lookup that will launch the masked form.
     """
     return "|".join([
         "x".join(str(int(s)) for s in shape),
@@ -77,6 +81,7 @@ def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
         f"interpret={bool(interpret)}",
         "mesh=" + ("local" if mesh is None else
                    "x".join(str(int(m)) for m in mesh)),
+        f"masked={bool(masked)}",
     ])
 
 
@@ -136,12 +141,17 @@ def _time_policy(u, spec, name: str, *, bm, t, interpret: bool,
 
 def measure(shape, dtype, spec: StencilSpec, *, t: int | None = None,
             bm: int | None = None, interpret: bool = True,
-            device: str | DeviceModel | None = None) -> dict:
+            device: str | DeviceModel | None = None,
+            masked: bool = False) -> dict:
     """Time every policy that plans on ``device``; return the record.
 
     Candidates whose plan fails validation (budget, shape) are skipped —
     that is the device model doing its job, not an error. Fused candidates
-    run at the effective depth ``t`` and are charged per sweep.
+    run at the effective depth ``t`` and are charged per sweep; with
+    ``masked`` (distributed-shard cells) they are gated by the masked
+    plan's larger footprint, since that is the form the distributed
+    executor launches (the timing itself still runs the plain kernel —
+    interpret-mode numbers are relative anyway).
     """
     global measure_count
     measure_count += 1
@@ -153,7 +163,8 @@ def measure(shape, dtype, spec: StencilSpec, *, t: int | None = None,
     for p in registry():
         kw_t = t_eff if p.fused else None
         try:
-            plan_for(shape, dtype, spec, p.name, bm=bm, t=kw_t, device=dev)
+            plan_for(shape, dtype, spec, p.name, bm=bm, t=kw_t, device=dev,
+                     masked=masked and p.fused)
         except PlanError as e:
             skipped[p.name] = str(e)
             continue
@@ -179,7 +190,7 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
                 t: int | None = None, bm: int | None = None,
                 interpret: bool = True,
                 device: str | DeviceModel | None = None,
-                mesh: tuple | None = None,
+                mesh: tuple | None = None, masked: bool = False,
                 cache_path: str | None = None) -> str:
     """The measured-fastest policy for this cell; measured at most once.
 
@@ -188,18 +199,21 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
     single-sweep call re-buckets to ``t=1`` (matching ``run``'s remainder
     semantics) rather than inheriting a t=8 winner it cannot run. ``mesh``
     buckets distributed-shard cells by decomposition shape (the
-    measurement itself still times the local shard kernel).
+    measurement itself still times the local shard kernel); ``masked``
+    gates fused candidates by their masked-plan footprint and always
+    rides with ``mesh`` in the distributed path, so the mesh bucket
+    already separates the two candidate worlds in the key.
     """
     dev = get_device(device)
-    t_eff = min(t if t is not None else DEFAULT_T, max(iters, 1))
+    t_eff = effective_depth(iters, t)
     key = tune_key(shape, dtype, spec, dev, t=t_eff, bm=bm,
-                   interpret=interpret, mesh=mesh)
+                   interpret=interpret, mesh=mesh, masked=masked)
     path = _cache_path(cache_path)
     cache = _cache_for(path)
     rec = cache.get(key)
     if rec is None:
         rec = measure(shape, dtype, spec, t=t_eff, bm=bm,
-                      interpret=interpret, device=dev)
+                      interpret=interpret, device=dev, masked=masked)
         cache[key] = rec
         _save(path)
     return rec["policy"]

@@ -5,7 +5,7 @@ however many devices this host exposes (decomposed like the paper's
 cores-in-Y x cores-in-X), and reports GPt/s + the converged residual.
 
   PYTHONPATH=src python -m repro.launch.solve --ny 1024 --nx 9216 \
-      --iters 500 --kernel ref --devices 8 --depth 8
+      --iters 500 --kernel temporal --devices 8 --t 8
 
 (--devices N>1 requires XLA_FLAGS=--xla_force_host_platform_device_count=N)
 """
@@ -32,6 +32,12 @@ def main():
                          "'tuned' measures once and caches the winner)")
     ap.add_argument("--temporal", type=int, default=8,
                     help="temporal-policy fusion depth")
+    ap.add_argument("--t", type=int, default=None,
+                    help="sweeps per fused block / halo exchange; overrides "
+                         "--temporal (single device) and --depth "
+                         "(distributed, where t fused sweeps run per shard "
+                         "between t*r-deep exchanges — the "
+                         "communication-avoiding schedule)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--device-model", default=None,
@@ -75,9 +81,10 @@ def main():
         policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
         if policy in ("ref", "reference"):
             policy = "rowchunk"  # the oracle has no lowering; use §VI
+        t_fuse = args.t if args.t is not None else args.temporal
         t0 = time.perf_counter()
         res = backends.simulate(u0, policy=policy, iters=args.iters,
-                                t=args.temporal, device=device)
+                                t=t_fuse, device=device)
         dt = time.perf_counter() - t0
         s = summarize(res)
         result = np.asarray(res.grid)[1:-1, 1:-1]
@@ -118,13 +125,15 @@ def main():
         policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
         if policy in ("ref", "reference"):
             policy = "reference"
-        if policy == "temporal" and args.temporal != args.depth:
-            # Distributed fusion depth is the halo depth: t sweeps per
-            # exchange; the fused kernel runs its single-sweep degenerate.
-            print(f"note: distributed runs fuse --depth={args.depth} sweeps "
-                  f"per halo exchange; --temporal={args.temporal} ignored")
+        # --t is the sweeps-per-exchange knob; fused policies run all t
+        # sweeps per shard in one kernel between t*r-deep exchanges.
+        t_fuse = args.t if args.t is not None else args.depth
+        sched, shard_shape, _ = engine.plan_distributed(
+            u0.shape, u0.dtype, mesh=mesh, policy=policy, iters=args.iters,
+            t=t_fuse, row_axis="x", device=device)
+        print(f"schedule: {sched.describe()}  shard={shard_shape}")
         run = jax.jit(lambda u: engine.run_distributed(
-            u, mesh=mesh, policy=policy, iters=args.iters, t=args.depth,
+            u, mesh=mesh, policy=policy, iters=args.iters, t=t_fuse,
             row_axis="x", device=device))
         run(u0).block_until_ready()  # compile
         t0 = time.perf_counter()
@@ -140,8 +149,9 @@ def main():
             from repro.core import jacobi as J
             run = jax.jit(lambda u: J.jacobi_run(u, args.iters))
         else:
+            t_fuse = args.t if args.t is not None else args.temporal
             run = jax.jit(lambda u: engine.run(
-                u, policy=policy, iters=args.iters, t=args.temporal,
+                u, policy=policy, iters=args.iters, t=t_fuse,
                 device=device))
         run(u0).block_until_ready()
         t0 = time.perf_counter()
@@ -151,7 +161,8 @@ def main():
         result = np.asarray(out)[1:-1, 1:-1]
 
     gpts = args.ny * args.nx * args.iters / dt / 1e9
-    print(f"kernel={args.kernel} devices={args.devices} depth={args.depth} "
+    print(f"kernel={args.kernel} devices={args.devices} "
+          f"t={args.t if args.t is not None else args.depth} "
           f"grid={args.ny}x{args.nx} iters={args.iters}")
     print(f"wall={dt:.3f}s  GPt/s={gpts:.3f}  "
           f"mean={result.mean():.6f}  max={result.max():.6f}")

@@ -189,6 +189,80 @@ def test_sim_matches_engine_run_bf16_tilized_exact(policy):
                                   want)
 
 
+def test_masked_temporal_lowering_streams_the_pin_mask():
+    """The distributed-shard temporal program carries an explicit mask
+    stream: a mask CB fed by a second DRAM source, consumed by the fused
+    local sweeps."""
+    from repro.backends.ir import LocalSweeps, ReadBlock
+    from repro.backends.lower import lower
+
+    prog = lower((34, 66), jnp.float32, jacobi_2d_5pt(), "temporal", t=2,
+                 masked=True)
+    mask_reads = [op for op in prog.reader
+                  if isinstance(op, ReadBlock) and op.src == "mask"]
+    assert len(mask_reads) == 1 and mask_reads[0].cb == "mask"
+    sweeps = [op for op in prog.compute if isinstance(op, LocalSweeps)]
+    assert sweeps[0].mask == "mask"
+    assert prog.plan.masked
+    assert "mask" in prog.describe()
+    # The unmasked program carries none of it.
+    plain = lower((34, 66), jnp.float32, jacobi_2d_5pt(), "temporal", t=2)
+    assert all(op.src == "grid" for op in plain.reader
+               if isinstance(op, ReadBlock))
+
+
+def test_sim_masked_temporal_matches_engine_masked_kernel():
+    """Sim of the masked shard program == the engine's masked Pallas
+    kernel, bit-for-bit in fp32, on the valid (cropped) region — and both
+    pin exactly the masked cells."""
+    t, d = 2, 2
+    u = _problem()
+    h, w = u.shape
+    mask = np.zeros((h, w), bool)
+    mask[:d, :] = mask[:, :d] = True  # a corner shard's global-ring slice
+    spec = jacobi_2d_5pt()
+    res = backends.simulate(u, spec, policy="temporal", iters=t, t=t,
+                            mask=mask)
+    want = np.asarray(engine.stencil_temporal(
+        u, spec, t=t, interpret=True, mask=jnp.asarray(mask)))
+    got = np.asarray(res.grid)
+    np.testing.assert_array_equal(got[:h - d, :w - d],
+                                  want[:h - d, :w - d])
+    np.testing.assert_array_equal(got[mask], np.asarray(u)[mask])
+    # The mask stream is real modeled traffic: reader bytes grow vs the
+    # unmasked program of the same schedule.
+    plain = backends.simulate(u, spec, policy="temporal", iters=t, t=t)
+    assert res.counters.reader.bytes > plain.counters.reader.bytes
+
+
+def test_sim_masked_program_requires_the_mask_stream():
+    from repro.backends.ir import BackendError
+    from repro.backends.lower import lower
+    from repro.backends.sim import run_program
+
+    prog = lower((34, 66), jnp.float32, jacobi_2d_5pt(), "temporal", t=2,
+                 masked=True)
+    with pytest.raises(BackendError, match="mask"):
+        run_program(np.zeros((34, 66), np.float32), prog)
+
+
+def test_sim_mask_rejects_unfused_and_remainder_schedules():
+    """Only fused blocks honor the pin mask; a remainder sweep (or a
+    non-fused policy) would silently re-pin the geometric ring instead of
+    the mask, so the simulator must refuse those schedules."""
+    from repro.backends.ir import BackendError
+
+    u = _problem()
+    mask = np.zeros(u.shape, bool)
+    mask[:2, :] = mask[:, :2] = True
+    with pytest.raises(BackendError, match="fully-fused"):
+        backends.simulate(u, jacobi_2d_5pt(), policy="temporal", iters=3,
+                          t=2, mask=mask)
+    with pytest.raises(BackendError, match="fully-fused"):
+        backends.simulate(u, jacobi_2d_5pt(), policy="rowchunk", iters=2,
+                          mask=mask)
+
+
 def test_sim_f32_through_tiles_is_bf16_tolerant():
     u = _problem()
     want = np.asarray(engine.run(u, jacobi_2d_5pt(), policy="rowchunk",
@@ -312,8 +386,13 @@ def test_tune_key_folds_in_mesh_shape():
                          mesh=(4,), **kw)
     k_m22 = tune.tune_key((34, 130), jnp.float32, jacobi_2d_5pt(), dev,
                           mesh=(2, 2), **kw)
-    assert len({k_local, k_m4, k_m22}) == 3
-    assert k_local.endswith("mesh=local") and k_m22.endswith("mesh=2x2")
+    k_m22_masked = tune.tune_key((34, 130), jnp.float32, jacobi_2d_5pt(),
+                                 dev, mesh=(2, 2), masked=True, **kw)
+    assert len({k_local, k_m4, k_m22, k_m22_masked}) == 4
+    assert "mesh=local" in k_local and "mesh=2x2" in k_m22
+    # masked-gated (distributed) cells never alias unmasked measurements
+    assert k_local.endswith("masked=False")
+    assert k_m22_masked.endswith("masked=True")
 
 
 def test_best_policy_mesh_cells_are_distinct(tmp_path):

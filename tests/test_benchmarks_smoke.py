@@ -31,6 +31,23 @@ def test_table_runs_dry(mod_name):
         assert parts[0] and parts[2]
 
 
+def test_table7_emits_fused_schedule_rows():
+    """Table VII must model the fused-vs-unfused exchange tradeoff in dry
+    mode: temporal (t>1) rows priced from the shared SweepSchedule, next
+    to the unfused cadence rows."""
+    from benchmarks import table7_core_scaling as t7
+
+    rows = t7.run()
+    fused = [r for r in rows if "_fused_t8" in r]
+    unfused = [r for r in rows if "_fused_t1" in r]
+    assert fused and unfused, rows
+    for r in fused:
+        derived = r.split(",", 2)[2]
+        assert "exchanges=2" in derived and "halo_depth=8" in derived, r
+    # Fusion must cut the modeled DRAM traffic relative to t=1.
+    assert "bytes_pt=0.50" in fused[0] and "bytes_pt=4.00" in unfused[0]
+
+
 def test_table8_traffic_comes_from_registry():
     """Table VIII may not hard-code bytes/point: its modeled rows must move
     if a policy's registered traffic model changes."""

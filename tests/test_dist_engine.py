@@ -6,6 +6,12 @@ latter exercises physical-corner transport) x halo depths t in {1, 3},
 each compared exactly against the single-device oracle. Dyadic tap weights
 keep every policy's f32 tap accumulation bit-identical regardless of XLA
 fusion; a non-dyadic spec (advection) is additionally checked to 1-ulp.
+
+The fused matrix then runs ``policy="temporal"`` over the same meshes at
+t in {2, 3} (divisible and remainder cases) for the face and diagonal-tap
+specs: the masked temporal kernel advances all t sweeps per shard between
+exchanges, and ``engine.plan_distributed`` must report the exchange count
+the schedule implies (iters // t fused + one remainder round).
 """
 import os
 import subprocess
@@ -44,6 +50,30 @@ for spec, name in [(jacobi_2d_5pt(), "jacobi5"), (diffusion_row, "diff3"),
                 tag = f"{name} mesh={mesh_shape} {policy} t={t}"
                 print(("ok   " if exact else "FAIL ") + tag)
                 failures += not exact
+
+# Fused temporal at mesh scale: t sweeps per exchange run inside ONE
+# masked kernel invocation per shard (not the single-sweep degenerate).
+# t=3 divides ITERS exactly; t=2 leaves a remainder round. The schedule
+# must price the exchanges and the result must stay bit-exact.
+for spec, name in [(jacobi_2d_5pt(), "jacobi5"), (diag9, "diag9")]:
+    want = np.asarray(engine.run(u, spec, policy="rowchunk", iters=ITERS))
+    for mesh_shape, axes in [((4,), ("x",)), ((2, 2), ("x", "y"))]:
+        mesh = jax.make_mesh(mesh_shape, axes)
+        for t in (2, 3):
+            sched, _, _ = engine.plan_distributed(
+                u.shape, u.dtype, spec, mesh=mesh, policy="temporal",
+                iters=ITERS, t=t)
+            nfull, rem = divmod(ITERS, t)
+            assert sched.policy == "temporal" and sched.fused, sched
+            assert sched.exchanges == nfull + (1 if rem else 0), sched
+            assert sched.halo_depth == t * spec.radius, sched
+            got = np.asarray(engine.run_distributed(
+                u, spec, mesh=mesh, policy="temporal", iters=ITERS, t=t))
+            exact = bool((got == want).all())
+            tag = f"{name} mesh={mesh_shape} temporal-fused t={t} " \
+                  f"exchanges={sched.exchanges}"
+            print(("ok   " if exact else "FAIL ") + tag)
+            failures += not exact
 
 # Non-dyadic weights: XLA fusion may differ by 1 ulp between programs.
 adv = advection_2d_3pt()

@@ -107,6 +107,54 @@ def test_temporal_deep_fusion_matches_oracle():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_temporal_mask_defaults_to_ring_mask():
+    """An explicit mask equal to the grid's own ring must reproduce the
+    unmasked kernel bit-for-bit (the mask only generalizes the pin set)."""
+    u = _problem(20, 66, jnp.float32)
+    spec = jacobi_2d_5pt()
+    mask = np.zeros(u.shape, bool)
+    mask[:1, :] = mask[-1:, :] = mask[:, :1] = mask[:, -1:] = True
+    got = engine.stencil_temporal(u, spec, t=3, interpret=True,
+                                  mask=jnp.asarray(mask))
+    want = engine.stencil_temporal(u, spec, t=3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_temporal_mask_pins_only_global_ring_cells():
+    """Distributed-shard semantics: pinned (global-ring) cells hold their
+    values through the fused sweeps even when unpinned halo cells are
+    perturbed, unpinned cells evolve, and the region far enough from any
+    unpinned edge matches the masked-sweep oracle exactly."""
+    t, d = 3, 3  # radius-1 spec: halo depth d = t*r
+    u = _problem(24, 66, jnp.float32)
+    h, w = u.shape
+    spec = jacobi_2d_5pt()
+    # A corner shard's pin set: the global ring slices it owns (top/left,
+    # d deep); bottom/right bands are exchanged halo and stay unpinned.
+    mask = np.zeros((h, w), bool)
+    mask[:d, :] = mask[:, :d] = True
+    jmask = jnp.asarray(mask)
+
+    got = engine.stencil_temporal(u, spec, t=t, interpret=True, mask=jmask)
+    # Pinned cells stay pinned...
+    np.testing.assert_array_equal(np.asarray(got)[mask], np.asarray(u)[mask])
+    # ...and keep staying pinned when the halo cells are perturbed.
+    u2 = jnp.where(jmask, u, u + jnp.float32(0.125))
+    got2 = engine.stencil_temporal(u2, spec, t=t, interpret=True, mask=jmask)
+    np.testing.assert_array_equal(np.asarray(got2)[mask],
+                                  np.asarray(u)[mask])
+    # The perturbation must actually reach the unpinned valid region —
+    # halo cells are real inputs, not decoration.
+    assert not np.array_equal(np.asarray(got2)[d:h - d, d:w - d],
+                              np.asarray(got)[d:h - d, d:w - d])
+    # Valid region (>= d from any unpinned edge) == masked-sweep oracle.
+    want = u
+    for _ in range(t):
+        want = jnp.where(jmask, u, apply_stencil(want, spec))
+    np.testing.assert_array_equal(np.asarray(got)[:h - d, :w - d],
+                                  np.asarray(want)[:h - d, :w - d])
+
+
 def test_auto_policy_matches_oracle():
     u = _problem(24, 128, jnp.float32)
     got = engine.run(u, laplace_2d_9pt(), policy="auto", iters=6, bm=8,
