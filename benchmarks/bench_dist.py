@@ -1,0 +1,189 @@
+"""Distributed halo benchmark — serial vs overlapped, modeled + measured.
+
+Tracks the perf trajectory of the exchange-hiding interior/rind split
+(`BENCH_dist.json`): for each (mesh, t) the same grid is priced through
+``engine.price_exchange`` against the ``grayskull_e150`` model (whose
+PCIe-isolated cards make the halo ride the 1.25 GB/s host link — the
+paper's §VII multi-card gap) and *measured* through the real
+``run_distributed`` executor on forced host devices, overlap off vs on.
+
+The grid is deliberately wide and thin (64 x 2040, fp32): shards on an
+8-way row mesh are 8 rows tall, so the t*r-deep halo bytes dominate the
+interior compute and hiding the exchange is a genuine win — the regime
+the tentpole exists for. Compute-bound entries in the same matrix stay
+serial, which is the point: the bill is a tradeoff, not a flag.
+
+Run: ``PYTHONPATH=src:. python -m benchmarks.bench_dist [--out PATH]``.
+With ``REPRO_BENCH_DRY=1`` measurement is skipped (measured_us = 0.0) but
+every modeled row is still priced — CI asserts the JSON this way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import dry_run, row
+
+GRID = (64, 2040)          # interior; make_laplace_problem pads the ring
+DTYPE = "float32"
+DEVICE = "grayskull_e150"
+# (mesh_shape, t, policy): policy only shapes the measured run — pricing
+# uses the schedule's rounds, which depend on t, not the kernel.
+CASES = [
+    ((8,), 1, "rowchunk"),
+    ((4,), 1, "rowchunk"),
+    ((4,), 4, "temporal"),
+    ((2, 2), 1, "rowchunk"),
+    ((2, 2), 4, "temporal"),
+]
+ITERS = 4
+
+_SCRIPT = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core.stencil import make_laplace_problem
+
+cases = json.loads(%(cases)r)
+ny, nx = %(grid)r
+u = make_laplace_problem(ny, nx, dtype=np.float32, left=1.0)
+out = []
+for mesh_shape, t, policy in cases:
+    axes = ("x", "y")[:len(mesh_shape)]
+    mesh = jax.make_mesh(tuple(mesh_shape), axes)
+    rec = {"mesh": list(mesh_shape), "t": t}
+    for tag, ovl in (("serial", False), ("overlapped", True)):
+        fn = jax.jit(lambda v, o=ovl: engine.run_distributed(
+            v, mesh=mesh, policy=policy, iters=%(iters)d, t=t,
+            row_axis="x", col_axis=("y" if len(mesh_shape) > 1 else None),
+            overlap=o))
+        jax.block_until_ready(fn(u))
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(u))
+            ts.append(time.perf_counter() - t0)
+        rec[tag + "_us"] = float(np.median(ts)) * 1e6
+    out.append(rec)
+print(json.dumps(out))
+"""
+
+
+def _mesh_tag(mesh_shape) -> str:
+    return "x".join(str(n) for n in mesh_shape)
+
+
+def _modeled() -> list[dict]:
+    """Price every case through the schedule's exchange bill."""
+    import numpy as np
+
+    from repro.core.stencil import jacobi_2d_5pt
+    from repro.engine.schedule import build_schedule, price_exchange
+
+    spec = jacobi_2d_5pt()
+    ny, nx = GRID
+    out = []
+    for mesh_shape, t, policy in CASES:
+        px = mesh_shape[0]
+        py = mesh_shape[1] if len(mesh_shape) > 1 else 1
+        sched = build_schedule(ITERS, spec=spec,
+                               shape=(ny // px + 2, nx // py + 2),
+                               dtype=np.float32, policy=policy, t=t,
+                               device=DEVICE, exchange_cadence=True)
+        d = sched.halo_depth
+        shard = (ny // px + 2 * d, nx // py + 2 * d)
+        bill = price_exchange(sched, shard_shape=shard, dtype=np.float32,
+                              spec=spec, device=DEVICE,
+                              mesh_shape=mesh_shape)
+        out.append({
+            "name": f"dist_{_mesh_tag(mesh_shape)}_t{sched.t}",
+            "mesh": list(mesh_shape), "t": sched.t, "policy": sched.policy,
+            "halo_bytes": bill.halo_bytes,
+            "modeled_serial_us": bill.serial_s * 1e6,
+            "modeled_overlapped_us": bill.overlapped_s * 1e6,
+            "overlap_feasible": bill.feasible,
+            "overlap_wins": bill.wins,
+        })
+    return out
+
+
+def _measured() -> dict[tuple, dict]:
+    """Wall-time serial vs overlapped through the real executor (host
+    devices forced; interpret-mode Pallas, so only relative numbers
+    matter). Empty in dry mode."""
+    if dry_run():
+        return {}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    script = _SCRIPT % {
+        "cases": json.dumps([[list(m), t, p] for m, t, p in CASES]),
+        "grid": GRID, "iters": ITERS}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError("bench_dist subprocess failed:\n"
+                           + proc.stderr.strip()[-2000:])
+    recs = json.loads(proc.stdout.strip().splitlines()[-1])
+    return {(tuple(r["mesh"]), r["t"]): r for r in recs}
+
+
+def collect() -> list[dict]:
+    measured = _measured()
+    rows = []
+    for rec in _modeled():
+        m = measured.get((tuple(rec["mesh"]), rec["t"]), {})
+        rec["measured_serial_us"] = m.get("serial_us", 0.0)
+        rec["measured_overlapped_us"] = m.get("overlapped_us", 0.0)
+        rows.append(rec)
+    return rows
+
+
+def run(rows: list[dict] | None = None) -> list[str]:
+    """CSV rows for the benchmarks.run harness (name,us,derived)."""
+    out = []
+    for rec in (collect() if rows is None else rows):
+        for mode in ("serial", "overlapped"):
+            out.append(row(
+                f"{rec['name']}_{mode}", rec[f"measured_{mode}_us"],
+                f"model_us={rec[f'modeled_{mode}_us']:.1f};"
+                f"halo_bytes={rec['halo_bytes']};"
+                f"wins={'overlap' if rec['overlap_wins'] else 'serial'}"))
+    return out
+
+
+def write_json(out_path: str, rows: list[dict] | None = None) -> dict:
+    payload = {
+        "bench": "dist_halo_overlap",
+        "device": DEVICE,
+        "grid": list(GRID),
+        "dtype": DTYPE,
+        "iters": ITERS,
+        "dry": dry_run(),
+        "rows": collect() if rows is None else rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dist.json")
+    args = ap.parse_args()
+    rows = collect()
+    payload = write_json(args.out, rows)
+    for line in run(rows):
+        print(line, flush=True)
+    n_win = sum(r["overlap_wins"] for r in payload["rows"])
+    print(f"# wrote {args.out}: {len(payload['rows'])} cases, "
+          f"{n_win} where overlap wins", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,8 @@ want = engine.run(u0, policy="rowchunk", iters=iters)
 ref_mean = float(jnp.mean(want[1:-1, 1:-1]))
 print(f"engine.run reference: mean={ref_mean:.6f}")
 
+from repro.core.stencil import jacobi_2d_5pt
+
 for mesh_shape in [(2, 2), (4, 2), (8, 1)]:
     ndev = mesh_shape[0] * mesh_shape[1]
     mesh = jax.sharding.Mesh(
@@ -54,6 +56,16 @@ for mesh_shape in [(2, 2), (4, 2), (8, 1)]:
         dt = time.perf_counter() - t0
         gpts = (u0.shape[0] - 2) * (u0.shape[1] - 2) * iters / dt / 1e9
         err = float(jnp.abs(out[1:-1, 1:-1] - want[1:-1, 1:-1]).max())
+        # What would this cadence cost on the paper's hardware? The e150's
+        # PCIe-isolated cards bill the halo over the host link, so the
+        # serial-vs-overlapped gap (interior launched while the exchange
+        # is in flight, rind patched in after) is worth seeing next to the
+        # exchange count.
+        bill = engine.price_exchange(sched, shard_shape=shard_shape,
+                                     dtype=u0.dtype, spec=jacobi_2d_5pt(),
+                                     device="grayskull_e150",
+                                     mesh_shape=mesh_shape)
         print(f"mesh {mesh_shape} t={t}: {dt*1e3:7.1f} ms  {gpts:6.2f} GPt/s"
               f"  exchanges={sched.exchanges:3d} (halo depth "
               f"{sched.halo_depth}, shard {shard_shape})  max|err|={err:.2e}")
+        print(f"    e150 bill: {bill.describe()}")

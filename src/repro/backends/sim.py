@@ -25,6 +25,13 @@ The numerics mirror the engine kernels op-for-op (f32 tap accumulation in
 spec order, Dirichlet re-pinning for temporal), so the row-major path is
 bit-exact against ``engine.run`` in fp32 and the tilized path agrees to
 bf16 tolerance — the equivalence tier-1 asserts.
+
+``simulate(mesh_shape=...)`` extends the step model across a device mesh:
+the counters-derived chip rate prices each shard's compute and every halo
+round is billed over the device's halo link, either serially or
+double-buffered (``overlap=True`` — exchange hidden under the
+halo-independent interior, rind strips patched in after), so the paper's
+multi-card what-if is visible from the simulator too.
 """
 from __future__ import annotations
 
@@ -35,7 +42,8 @@ import numpy as np
 
 from repro.core.stencil import StencilSpec, jacobi_2d_5pt
 from repro.engine.device import DeviceModel
-from repro.engine.schedule import DEFAULT_REMAINDER_POLICY, build_schedule
+from repro.engine.schedule import (DEFAULT_REMAINDER_POLICY, ExchangeBill,
+                                   build_schedule, price_exchange)
 from repro.backends.lower import lower as _lower
 from repro.backends.ir import (BackendError, CBOverflowError,
                                CBUnderflowError, LocalSweeps,
@@ -99,6 +107,11 @@ class SimResult:
     device: DeviceModel
     cores_used: int
     programs: tuple[TensixProgram, ...]
+    #: Mesh runs only (``simulate(mesh_shape=...)``): the per-shard halo
+    #: exchange bill, serial vs overlapped, priced at this simulation's
+    #: counters-derived compute rate. ``model_time_s`` is then the chosen
+    #: side of the bill instead of the single-chip time.
+    exchange_model: ExchangeBill | None = None
 
     @property
     def interior_points(self) -> int:
@@ -403,7 +416,9 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
              device: str | DeviceModel | None = None,
              tilized: bool | None = None, interleaved: bool = False,
              mask=None,
-             remainder_policy: str = DEFAULT_REMAINDER_POLICY) -> SimResult:
+             remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+             mesh_shape: tuple | None = None,
+             overlap: bool = False) -> SimResult:
     """Advance a ringed grid ``iters`` sweeps through the lowered backend.
 
     The contract mirrors :func:`repro.engine.run` exactly — same policy
@@ -415,6 +430,19 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
     the numbers. ``mask`` (optional, grid-shaped, nonzero = pinned) lowers
     fused blocks in their masked distributed-shard form, with the pin set
     streamed from DRAM instead of derived from the ring geometry.
+
+    ``mesh_shape`` (e.g. ``(4,)`` for the paper's four cards) extends the
+    step model across a device mesh: the grid decomposes into shards, the
+    simulated chip's counters-derived rate (seconds per point per sweep,
+    already embodying the NoC/DRAM/vector step model) prices each shard's
+    compute, and every halo round is billed over
+    :attr:`~repro.engine.device.DeviceModel.halo_link_bw` through
+    :func:`~repro.engine.schedule.price_exchange`. ``overlap`` selects the
+    double-buffered bill — exchange hidden under the halo-independent
+    interior, ``max(exchange, interior) + rind`` — instead of the serial
+    ``exchange + compute`` sum; ``model_time_s`` becomes the chosen side
+    and ``exchange_model`` carries the whole bill. Numerics are untouched
+    (the simulated grid is the full-grid result either way).
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     u_np = np.asarray(u)
@@ -466,10 +494,43 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
             total.merge(counters)
     dev = programs[0].plan.device
     ncores = min(programs[0].plan.nblocks, dev.cores)
+    model_time = _chip_time(total, core_times, dev)
+    bill = None
+    if mesh_shape is not None and int(np.prod(mesh_shape)) > 1:
+        bill = _mesh_exchange_bill(sched, shape, dtype, spec, dev,
+                                   mesh_shape, model_time)
+        model_time = bill.overlapped_s if overlap else bill.serial_s
     return SimResult(grid=jnp.asarray(u_np), counters=total,
-                     model_time_s=_chip_time(total, core_times, dev),
+                     model_time_s=model_time,
                      device=dev, cores_used=ncores,
-                     programs=tuple(programs))
+                     programs=tuple(programs), exchange_model=bill)
+
+
+def _mesh_exchange_bill(sched, shape, dtype, spec: StencilSpec,
+                        dev: DeviceModel, mesh_shape: tuple,
+                        chip_time_s: float) -> ExchangeBill:
+    """Price the simulated schedule's halo rounds over a device mesh.
+
+    The single-chip simulation already stepped the whole grid through the
+    NoC/DRAM model; its per-point-per-sweep rate carries that cost model
+    into the per-shard interior/rind pricing, so the exchange-vs-compute
+    tradeoff the distributed executor faces is visible from the backend
+    simulator with the same geometry ``engine.price_exchange`` uses.
+    """
+    r = spec.radius
+    hi, wi = shape[0] - 2 * r, shape[1] - 2 * r
+    px = int(mesh_shape[0])
+    py = int(mesh_shape[1]) if len(mesh_shape) > 1 else 1
+    if hi % px or wi % py:
+        raise BackendError(
+            f"interior {hi}x{wi} does not decompose over mesh "
+            f"{tuple(mesh_shape)}")
+    d = sched.halo_depth
+    ext_shard = (hi // px + 2 * d, wi // py + 2 * d)
+    rate = chip_time_s / max(hi * wi * max(sched.iters, 1), 1)
+    return price_exchange(sched, shard_shape=ext_shard, dtype=dtype,
+                          spec=spec, device=dev, mesh_shape=mesh_shape,
+                          compute_rate=rate)
 
 
 def simulate_program(u, prog: TensixProgram, *, reps: int = 1) -> SimResult:

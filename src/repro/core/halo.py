@@ -1,13 +1,15 @@
-"""Hand-tuned 5-point distributed Jacobi: halo exchange via shard_map.
+"""Distributed Jacobi front door: halo exchange via shard_map.
 
-This module keeps the paper-specific fast path — a depth-1 exchange whose
-halo-independent inner region is computed while the ``ppermute`` is in
-flight (``overlap=True``). Everything general — deep (depth-``t``) halos,
-Dirichlet-band pinning, corner transport, arbitrary
-:class:`~repro.core.stencil.StencilSpec` and engine policies per shard —
-lives in :mod:`repro.dist.stencil` behind ``repro.engine.run_distributed``;
-:func:`make_distributed_step` delegates there for every non-overlap case so
-the machinery exists exactly once.
+This module owns the ``ppermute`` exchange helpers and the legacy 5-point
+entry point; everything else — deep (depth-``t``) halos, Dirichlet-band
+pinning, corner transport, arbitrary
+:class:`~repro.core.stencil.StencilSpec` and engine policies per shard,
+and the exchange-hiding interior/rind overlap — lives in
+:mod:`repro.dist.stencil` behind ``repro.engine.run_distributed``;
+:func:`make_distributed_step` is a thin delegate, so the machinery exists
+exactly once. (The depth-1 overlapped 5-point fast path this module used
+to hand-roll is now just the ``(r=1, t=1)`` case of the generalized
+split.)
 
 This is the paper's §VII scaled-up solver done the way the paper *couldn't*:
 the Grayskull's four PCIe cards cannot read each other's memory, so the
@@ -21,20 +23,18 @@ Design notes
   may be trivial). Matches the paper's "cores in Y x cores in X" grids.
 * Depth-``t`` halos: one exchange per ``t`` local sweeps (temporal blocking
   across the network — the communication-avoiding variant of kernels v2).
-* ``overlap=True`` computes the halo-independent inner region while the
+* ``overlap=True`` computes the halo-independent interior while the
   ppermute is in flight (no data dependence, so XLA's latency-hiding
-  scheduler overlaps them) and patches the edge cells afterwards.
+  scheduler overlaps them) and stitches the rind strips in afterwards —
+  at any depth, not just 1.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-
-from repro.dist._compat import shard_map
+from jax.sharding import Mesh
 
 
 def _fwd_perm(n: int):
@@ -68,55 +68,6 @@ def exchange_cols(u: jax.Array, axis: str, n: int, depth: int = 1):
     return left, right
 
 
-def _five_point(ext: jax.Array) -> jax.Array:
-    """5-pt update of the interior of an extended (haloed) block, f32 acc."""
-    e = ext.astype(jnp.float32)
-    return ((e[:-2, 1:-1] + e[2:, 1:-1] + e[1:-1, :-2] + e[1:-1, 2:]) * 0.25
-            ).astype(ext.dtype)
-
-
-def _local_step_overlap(u, top, bottom, left, right, *, row_axis, col_axis,
-                        px, py):
-    """One overlapped 5-pt sweep on the local shard (depth-1 fast path).
-
-    The inner region depends on no halo, so it is computed up front — XLA's
-    latency-hiding scheduler runs it while the ppermutes are in flight —
-    and the halo-dependent edge ring is patched in afterwards.
-    """
-    ix = jax.lax.axis_index(row_axis) if px > 1 else 0
-    iy = jax.lax.axis_index(col_axis) if py > 1 else 0
-
-    inner = _five_point(u)  # (hl-2, wl-2), valid for local-interior cells
-
-    # Rows: substitute Dirichlet rows on physical edges.
-    uh, dh = exchange_rows(u, row_axis, px, 1)
-    uh = jnp.where(ix == 0, top[None, :].astype(u.dtype), uh)
-    dh = jnp.where(ix == px - 1, bottom[None, :].astype(u.dtype), dh)
-    ext_r = jnp.concatenate([uh, u, dh], axis=0)  # (hl+2, wl)
-
-    # Left/right Dirichlet columns span the halo rows (values live on the
-    # row neighbours), so extend them through the same exchange.
-    lcol = left[:, None].astype(u.dtype)
-    rcol = right[:, None].astype(u.dtype)
-    lt, lb = exchange_rows(lcol, row_axis, px, 1)
-    rt, rb = exchange_rows(rcol, row_axis, px, 1)
-    left_ext = jnp.concatenate([lt, lcol, lb], axis=0)    # (hl+2, 1)
-    right_ext = jnp.concatenate([rt, rcol, rb], axis=0)
-
-    # Columns of the row-extended block.
-    lh, rh = exchange_cols(ext_r, col_axis, py, 1)
-    lh = jnp.where(iy == 0, left_ext, lh)
-    rh = jnp.where(iy == py - 1, right_ext, rh)
-    ext = jnp.concatenate([lh, ext_r, rh], axis=1)        # (hl+2, wl+2)
-
-    new = _five_point(ext)
-    # Patch: keep the pre-computed inner block (identical values — this
-    # keeps the halo-dependent edge compute on the critical path as small
-    # as possible; XLA dedups, on TPU the pattern lowers to overlapped
-    # ppermute + inner fusion).
-    return new.at[1:-1, 1:-1].set(inner)
-
-
 def make_distributed_step(
     mesh: Mesh,
     row_axis: str | None = "data",
@@ -130,36 +81,13 @@ def make_distributed_step(
     The returned function advances the grid by ``depth`` Jacobi sweeps with
     one halo exchange. ``local_sweep`` optionally plugs a custom kernel in
     for the local computation (ringed contract: full grid in, full grid out,
-    outer ring copied through). Everything except the depth-1 overlapped
-    5-point fast path delegates to :mod:`repro.dist.stencil`.
+    outer ring copied through). ``overlap`` computes the halo-independent
+    interior while the exchange is in flight (any depth — the depth-1
+    5-point case this module once special-cased is just ``(r=1, t=1)`` of
+    the general split). Everything delegates to :mod:`repro.dist.stencil`.
     """
-    px = mesh.shape[row_axis] if row_axis else 1
-    py = mesh.shape[col_axis] if col_axis else 1
-
-    if depth == 1 and overlap and local_sweep is None:
-        r_ax = row_axis or "_row_unused"
-        c_ax = col_axis or "_col_unused"
-        fn = functools.partial(_local_step_overlap, row_axis=r_ax,
-                               col_axis=c_ax, px=px, py=py)
-        rows = P(r_ax if px > 1 else None)
-        cols = P(c_ax if py > 1 else None)
-        grid_spec = P(r_ax if px > 1 else None, c_ax if py > 1 else None)
-        sharded = shard_map(
-            fn, mesh=mesh,
-            in_specs=(grid_spec, cols, cols, rows, rows),
-            out_specs=grid_spec,
-            check_vma=False,
-        )
-
-        def step(interior: jax.Array, bc: Dict[str, jax.Array]) -> jax.Array:
-            return sharded(interior, bc["top"], bc["bottom"], bc["left"],
-                           bc["right"])
-
-        return step
-
-    # General path: one shared implementation of deep halos, Dirichlet
-    # pinning, and corner transport. Lazy import — dist.stencil imports the
-    # exchange helpers from this module.
+    # Lazy import — dist.stencil imports the exchange helpers from this
+    # module.
     from repro.core.stencil import apply_stencil, jacobi_2d_5pt
     from repro.dist import stencil as dstencil
 
@@ -169,7 +97,8 @@ def make_distributed_step(
     band_step = dstencil.make_sharded_step(mesh, spec,
                                            dstencil.masked_block(sweep),
                                            row_axis=row_axis,
-                                           col_axis=col_axis, t=depth)
+                                           col_axis=col_axis, t=depth,
+                                           overlap=overlap)
 
     def step(interior: jax.Array, bc: Dict[str, jax.Array]) -> jax.Array:
         bands = {"top": bc["top"][None, :], "bottom": bc["bottom"][None, :],

@@ -24,6 +24,16 @@ Scheme per exchange, for ``t`` sweeps of a radius-``r`` spec:
   communication-avoiding payoff);
 * crop the exact central block.
 
+In **overlap** mode the block launch splits in two: the shard's interior
+(independent of any incoming halo) launches on the raw shard *before* the
+``ppermute``s — no data dependence, so XLA's latency-hiding scheduler
+computes it while the ``t*r``-deep exchange is in flight — and four rind
+strips of width ``3*t*r`` launch on the arrived extended block, stitched
+around the interior. The result is bit-identical to the serial round (the
+kept cells' dependency cones and tap order are the same); what changes is
+the wall-clock bill, ``max(exchange, interior) + rind`` instead of
+``exchange + full block`` (:func:`repro.engine.schedule.price_exchange`).
+
 One exchange per ``t`` sweeps is the communication-avoiding schedule the
 paper's PCIe-isolated Grayskull cards could not run (§VII); over a real mesh
 the halos travel on ICI/DCI and the answer is exact. How many exchanges a
@@ -85,16 +95,38 @@ def masked_block(sweep: Callable) -> Callable:
 
 def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
                   block: Callable, row_axis: str, col_axis: str,
-                  px: int, py: int, r: int, t: int):
+                  px: int, py: int, r: int, t: int,
+                  overlap: bool = False):
     """Advance the local shard by ``t`` sweeps with one depth-``t*r``
     exchange. Bands are local slices of the global Dirichlet bands;
-    ``tl``/``tr``/``bl``/``br`` are the replicated ``r x r`` ring corners."""
+    ``tl``/``tr``/``bl``/``br`` are the replicated ``r x r`` ring corners.
+
+    With ``overlap``, the shard splits into an **interior** launch on the
+    raw (un-haloed) shard — no data dependence on the ppermutes, so XLA's
+    latency-hiding scheduler computes it while the exchange is in flight —
+    and four **rind** strip launches on the arrived extended block. After
+    ``t`` sweeps of radius ``r``, every cell at distance >= ``d = t*r``
+    from a strip edge has the same dependency cone (and the same f32 tap
+    accumulation order) as in the one-block launch, so the stitched
+    result is bit-identical to the serial path; cells nearer an edge are
+    stale in *both* formulations and are exactly the ones cropped/covered.
+    A shard too small for a nonempty interior (``hl <= 2d`` or
+    ``wl <= 2d``) silently runs the serial round — same numbers, nothing
+    left to hide the exchange behind.
+    """
     hl, wl = u.shape
     d = t * r
     if d > min(hl, wl):
         raise ValueError(
             f"halo depth {d} (t={t} sweeps x radius {r}) exceeds local "
             f"block {u.shape}; lower t or use more rows/cols per shard")
+    overlap = overlap and hl > 2 * d and wl > 2 * d
+    if overlap:
+        # Interior launch, issued before the exchange: after t sweeps the
+        # cells >= d from the shard edge are exact (the near-edge cells
+        # would need halo data and are covered by the rind strips below).
+        inner = block(u, jnp.zeros(u.shape, bool), t)
+        inner_keep = inner[d:hl - d, d:wl - d]
     ix = jax.lax.axis_index(row_axis) if px > 1 else 0
     iy = jax.lax.axis_index(col_axis) if py > 1 else 0
 
@@ -141,19 +173,41 @@ def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
     cc = jnp.arange(wl + 2 * d)[None, :]
     fixed = (((ix == 0) & (rr < d)) | ((ix == px - 1) & (rr >= hl + d))
              | ((iy == 0) & (cc < d)) | ((iy == py - 1) & (cc >= wl + d)))
+    if overlap:
+        # Rind: four strip launches on the arrived block, each wide
+        # enough (3d) that its kept cells sit >= d from every strip edge
+        # that is not ext's own (pinned or cropped-anyway) boundary.
+        # Top/bottom strips span the full width and keep the first/last
+        # d interior rows; left/right strips fill the remaining hl - 2d
+        # rows and keep the first/last d interior columns.
+        strips = (
+            (slice(0, 3 * d), slice(None)),                    # top
+            (slice(hl - d, hl + 2 * d), slice(None)),          # bottom
+            (slice(d, hl + d), slice(0, 3 * d)),               # left
+            (slice(d, hl + d), slice(wl - d, wl + 2 * d)),     # right
+        )
+        outs = [block(ext[rs, cs], fixed[rs, cs], t) for rs, cs in strips]
+        top_k = outs[0][d:2 * d, d:wl + d]
+        bot_k = outs[1][d:2 * d, d:wl + d]
+        lef_k = outs[2][d:hl - d, d:2 * d]
+        rig_k = outs[3][d:hl - d, d:2 * d]
+        mid = jnp.concatenate([lef_k, inner_keep, rig_k], axis=1)
+        return jnp.concatenate([top_k, mid, bot_k], axis=0)
     ext = block(ext, fixed, t)
     return ext[d:-d, d:-d]
 
 
 def make_sharded_step(mesh, spec: StencilSpec, block: Callable, *,
                       row_axis: str | None, col_axis: str | None,
-                      t: int = 1) -> Callable:
+                      t: int = 1, overlap: bool = False) -> Callable:
     """Build ``step(interior, bc) -> interior'`` advancing ``t`` sweeps of
     ``spec`` with one halo exchange, sharded over ``mesh``.
 
     ``block(ext, fixed, t)`` is the local computation on the extended
     (haloed) shard — wrap a plain single-sweep callable with
-    :func:`masked_block`.
+    :func:`masked_block`. ``overlap`` runs the interior/rind split so the
+    halo-independent compute hides the exchange (bit-identical result;
+    see :func:`_local_sweeps`).
     """
     px = mesh.shape[row_axis] if row_axis else 1
     py = mesh.shape[col_axis] if col_axis else 1
@@ -162,7 +216,7 @@ def make_sharded_step(mesh, spec: StencilSpec, block: Callable, *,
 
     fn = functools.partial(
         _local_sweeps, block=block, row_axis=row_axis, col_axis=col_axis,
-        px=px, py=py, r=spec.radius, t=t)
+        px=px, py=py, r=spec.radius, t=t, overlap=overlap)
 
     row = row_axis if px > 1 else None
     col = col_axis if py > 1 else None
@@ -226,7 +280,8 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
     ``remainder_block`` (default: ``block`` again). Same contract as
     ``engine.run``: returns the full grid, boundary ring copied through.
     The iters/t/remainder arithmetic lives in the schedule — this function
-    only spends exchanges.
+    only spends exchanges; ``schedule.overlap`` selects the interior/rind
+    split that hides each exchange behind the halo-independent compute.
     """
     row_axis, col_axis = resolve_axes(mesh, row_axis, col_axis)
     r = spec.radius
@@ -240,7 +295,8 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
 
     if schedule.fused_blocks:
         step = make_sharded_step(mesh, spec, block, row_axis=row_axis,
-                                 col_axis=col_axis, t=schedule.t)
+                                 col_axis=col_axis, t=schedule.t,
+                                 overlap=schedule.overlap)
 
         def body(v, _):
             return step(v, bc), None
@@ -251,6 +307,6 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
         step_rem = make_sharded_step(
             mesh, spec, remainder_block if remainder_block is not None
             else block, row_axis=row_axis, col_axis=col_axis,
-            t=schedule.remainder)
+            t=schedule.remainder, overlap=schedule.overlap)
         interior = step_rem(interior, bc)
     return u.at[r:-r, r:-r].set(interior)

@@ -52,9 +52,11 @@ from repro.engine.policies import (  # noqa: F401
 )
 from repro.engine.schedule import (  # noqa: F401
     DEFAULT_REMAINDER_POLICY,
+    ExchangeBill,
     SweepSchedule,
     build_schedule,
     effective_depth,
+    price_exchange,
 )
 from repro.engine.dispatch import (  # noqa: F401
     Policy,

@@ -68,6 +68,11 @@ class DeviceModel:
     noc_bw: float = 0.0       # per-core streaming bytes/s; 0 -> dram_bw
     txn_overhead_s: float = 1e-6  # per-DMA-descriptor issue cost
     core_grid: tuple[int, int] | None = None
+    # Whether mesh neighbours exchange halos over the direct interconnect
+    # (ICI/NVLink). False means the paper's §VII situation: isolated cards
+    # whose inter-device traffic must bounce through the host, so halo
+    # exchange is billed at ``inter_node_bw`` instead.
+    mesh_direct_links: bool = True
 
     @property
     def preferred_jax_dtype(self):
@@ -85,6 +90,14 @@ class DeviceModel:
     def stream_bw(self) -> float:
         """Effective per-core DRAM streaming bandwidth (bytes/s)."""
         return self.noc_bw if self.noc_bw > 0 else self.dram_bw
+
+    @property
+    def halo_link_bw(self) -> float:
+        """Bytes/s one mesh halo exchange rides: the direct interconnect,
+        or the host-mediated inter-node pipe when neighbour devices cannot
+        read each other's memory (``mesh_direct_links=False``)."""
+        return self.interconnect_bw if self.mesh_direct_links \
+            else self.inter_node_bw
 
     @property
     def grid(self) -> tuple[int, int]:
@@ -220,6 +233,7 @@ GRAYSKULL_E150 = register_device(DeviceModel(
     noc_bw=12e9,
     txn_overhead_s=1.05e-7,
     core_grid=(9, 12),         # the 108 usable cores of the e150
+    mesh_direct_links=False,   # cards can't read each other's DRAM (§VII)
 ))
 
 GPU_SM90 = register_device(DeviceModel(

@@ -54,7 +54,8 @@ def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
                     dtype, iters: int = 1, t: int = 1,
                     bm: int | None = None, interpret: bool = False,
                     device: str | None = None,
-                    mesh_shape: tuple | None = None):
+                    mesh_shape: tuple | None = None,
+                    overlap: bool = False):
     """Resolve a policy name to a block callable on extended shards.
 
     The returned ``block(ext, fixed, t)`` advances an extended shard ``t``
@@ -69,9 +70,11 @@ def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
     (static) extended shard shape on ``device`` at the *real* ``iters``
     and ``t`` — the schedule the shard will actually run, not the ``t=1``
     degenerate (``mesh_shape`` folds the decomposition into the tuned
-    cache key so local and distributed winners never alias). For registry
-    policies the shard plan is resolved eagerly here, surfacing
-    device-budget violations before shard_map tracing starts.
+    cache key so local and distributed winners never alias, and
+    ``overlap`` buckets the interior/rind split's winners separately from
+    serial ones). For registry policies the shard plan is resolved
+    eagerly here, surfacing device-budget violations before shard_map
+    tracing starts.
     """
     from repro.dist.stencil import masked_block
 
@@ -84,7 +87,8 @@ def local_sweep_for(policy: str, spec: StencilSpec, *, shard_shape,
         from repro.engine import tune  # deferred: tune dispatches back here
         policy = tune.best_policy(shard_shape, dtype, spec, iters=iters, t=t,
                                   bm=bm, interpret=interpret, device=device,
-                                  mesh=mesh_shape, masked=True)
+                                  mesh=mesh_shape, masked=True,
+                                  overlap=overlap)
     p = get_policy(policy)
     if p.fused:
         plan_for(shard_shape, dtype, spec, policy, bm=bm, t=t, device=device,
@@ -103,7 +107,8 @@ def plan_distributed(shape, dtype, spec: StencilSpec | None = None, *,
                      col_axis: str | None = None,
                      interpret: bool | None = None,
                      device: str | DeviceModel | None = None,
-                     remainder_policy: str = DEFAULT_REMAINDER_POLICY
+                     remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                     overlap: bool | None = None
                      ) -> tuple[SweepSchedule, tuple[int, int], tuple]:
     """Resolve what a ``run_distributed`` call will execute, without running.
 
@@ -113,6 +118,13 @@ def plan_distributed(shape, dtype, spec: StencilSpec | None = None, *,
     exchanges of depth ``schedule.halo_depth``), plus the static extended
     shard shape per-shard plans are validated against. ``run_distributed``
     itself goes through here, so inspection and execution cannot disagree.
+
+    ``overlap=None`` lets the schedule *choose* the interior/rind
+    exchange-hiding split by price (``engine.price_exchange`` against
+    ``device`` and the mesh decomposition); ``True``/``False`` force it.
+    The choice lands in ``schedule.overlap`` — pass the returned schedule
+    plus shard shape to :func:`repro.engine.schedule.price_exchange` to
+    see the serial-vs-overlapped exchange bill the choice was made from.
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
@@ -129,7 +141,7 @@ def plan_distributed(shape, dtype, spec: StencilSpec | None = None, *,
                            device=_resolve_device_name(device),
                            mesh_shape=mesh_shape,
                            remainder_policy=remainder_policy,
-                           exchange_cadence=True)
+                           exchange_cadence=True, overlap=overlap)
     return sched, shard_shape, (row_axis, col_axis)
 
 
@@ -139,8 +151,8 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
                     col_axis: str | None = None,
                     interpret: bool | None = None,
                     device: str | DeviceModel | None = None,
-                    remainder_policy: str = DEFAULT_REMAINDER_POLICY
-                    ) -> jax.Array:
+                    remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                    overlap: bool | None = None) -> jax.Array:
     """Advance a ringed grid by ``iters`` sweeps of ``spec`` over ``mesh``.
 
     Same contract and return as ``engine.run`` (full grid, ring copied
@@ -154,7 +166,9 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
     selects the device model each shard's plan is validated against (None
     = the detected host backend); leftover ``iters % t`` sweeps run under
     ``remainder_policy`` when the main policy is fused, exactly like
-    ``engine.run``.
+    ``engine.run``. ``overlap`` hides each exchange behind the shard's
+    halo-independent interior compute (``None`` = let the schedule price
+    it; the result is bit-identical either way).
     """
     from repro.dist import stencil as dstencil
 
@@ -165,12 +179,12 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
     sched, shard_shape, (row_axis, col_axis) = plan_distributed(
         u.shape, u.dtype, spec, mesh=mesh, policy=policy, iters=iters, t=t,
         bm=bm, row_axis=row_axis, col_axis=col_axis, interpret=interpret,
-        device=device, remainder_policy=remainder_policy)
+        device=device, remainder_policy=remainder_policy, overlap=overlap)
     mesh_shape = _mesh_shape(mesh, row_axis, col_axis)
     block = local_sweep_for(sched.policy, spec, shard_shape=shard_shape,
                             dtype=u.dtype, iters=iters, t=sched.t, bm=bm,
                             interpret=interpret, device=device,
-                            mesh_shape=mesh_shape)
+                            mesh_shape=mesh_shape, overlap=sched.overlap)
     remainder_block = None
     if sched.remainder and sched.remainder_policy != sched.policy:
         # Fused main policy with leftovers: the shallower remainder
@@ -178,7 +192,8 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
         remainder_block = local_sweep_for(
             sched.remainder_policy, spec, shard_shape=shard_shape,
             dtype=u.dtype, iters=sched.remainder, t=sched.remainder, bm=bm,
-            interpret=interpret, device=device, mesh_shape=mesh_shape)
+            interpret=interpret, device=device, mesh_shape=mesh_shape,
+            overlap=sched.overlap)
     return dstencil.run_sharded(u, spec, mesh, block, schedule=sched,
                                 row_axis=row_axis, col_axis=col_axis,
                                 remainder_block=remainder_block)

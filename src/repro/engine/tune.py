@@ -59,7 +59,8 @@ def _cache_path(cache_path: str | None) -> str:
 
 def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
              t: int | None, bm: int | None, interpret: bool = True,
-             mesh: tuple | None = None, masked: bool = False) -> str:
+             mesh: tuple | None = None, masked: bool = False,
+             overlap: bool = False) -> str:
     """Stable cache key for one autotune cell.
 
     ``mesh`` is the decomposition shape when the caller is tuning a *shard*
@@ -69,7 +70,11 @@ def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
     and per-mesh cells never share winners. ``masked`` separates cells
     whose fused candidates were gated by the masked (pin-mask-streaming)
     plan — a winner measured without that gate must never satisfy a
-    lookup that will launch the masked form.
+    lookup that will launch the masked form. ``overlap`` separates cells
+    whose schedule runs the interior/rind exchange-hiding split: the
+    overlapped executor launches the kernel on the raw shard plus four
+    rind strips instead of one extended block, a different enough launch
+    geometry that its winner must never alias the serial one.
     """
     return "|".join([
         "x".join(str(int(s)) for s in shape),
@@ -82,6 +87,7 @@ def tune_key(shape, dtype, spec: StencilSpec, device: DeviceModel, *,
         "mesh=" + ("local" if mesh is None else
                    "x".join(str(int(m)) for m in mesh)),
         f"masked={bool(masked)}",
+        f"overlap={bool(overlap)}",
     ])
 
 
@@ -191,6 +197,7 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
                 interpret: bool = True,
                 device: str | DeviceModel | None = None,
                 mesh: tuple | None = None, masked: bool = False,
+                overlap: bool = False,
                 cache_path: str | None = None) -> str:
     """The measured-fastest policy for this cell; measured at most once.
 
@@ -207,7 +214,8 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
     dev = get_device(device)
     t_eff = effective_depth(iters, t)
     key = tune_key(shape, dtype, spec, dev, t=t_eff, bm=bm,
-                   interpret=interpret, mesh=mesh, masked=masked)
+                   interpret=interpret, mesh=mesh, masked=masked,
+                   overlap=overlap)
     path = _cache_path(cache_path)
     cache = _cache_for(path)
     rec = cache.get(key)

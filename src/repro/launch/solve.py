@@ -53,6 +53,13 @@ def main():
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--depth", type=int, default=1,
                     help="halo exchange depth (sweeps per exchange)")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="hide each halo exchange behind the shard's "
+                         "halo-independent interior compute, patching the "
+                         "rind in after arrival (distributed only; "
+                         "bit-exact either way). 'auto' lets the schedule "
+                         "price it against --device-model")
     ap.add_argument("--check", action="store_true",
                     help="verify against the single-device reference")
     args = ap.parse_args()
@@ -128,13 +135,20 @@ def main():
         # --t is the sweeps-per-exchange knob; fused policies run all t
         # sweeps per shard in one kernel between t*r-deep exchanges.
         t_fuse = args.t if args.t is not None else args.depth
+        overlap = {"auto": None, "on": True, "off": False}[args.overlap]
         sched, shard_shape, _ = engine.plan_distributed(
             u0.shape, u0.dtype, mesh=mesh, policy=policy, iters=args.iters,
-            t=t_fuse, row_axis="x", device=device)
+            t=t_fuse, row_axis="x", device=device, overlap=overlap)
         print(f"schedule: {sched.describe()}  shard={shard_shape}")
+        from repro.core.stencil import jacobi_2d_5pt
+        bill = engine.price_exchange(sched, shard_shape=shard_shape,
+                                     dtype=u0.dtype, spec=jacobi_2d_5pt(),
+                                     device=device,
+                                     mesh_shape=(args.devices,))
+        print(f"exchange bill: {bill.describe()}")
         run = jax.jit(lambda u: engine.run_distributed(
             u, mesh=mesh, policy=policy, iters=args.iters, t=t_fuse,
-            row_axis="x", device=device))
+            row_axis="x", device=device, overlap=overlap))
         run(u0).block_until_ready()  # compile
         t0 = time.perf_counter()
         out = run(u0)

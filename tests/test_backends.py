@@ -388,11 +388,16 @@ def test_tune_key_folds_in_mesh_shape():
                           mesh=(2, 2), **kw)
     k_m22_masked = tune.tune_key((34, 130), jnp.float32, jacobi_2d_5pt(),
                                  dev, mesh=(2, 2), masked=True, **kw)
-    assert len({k_local, k_m4, k_m22, k_m22_masked}) == 4
+    k_m22_overlap = tune.tune_key((34, 130), jnp.float32, jacobi_2d_5pt(),
+                                  dev, mesh=(2, 2), masked=True,
+                                  overlap=True, **kw)
+    assert len({k_local, k_m4, k_m22, k_m22_masked, k_m22_overlap}) == 5
     assert "mesh=local" in k_local and "mesh=2x2" in k_m22
-    # masked-gated (distributed) cells never alias unmasked measurements
-    assert k_local.endswith("masked=False")
-    assert k_m22_masked.endswith("masked=True")
+    # masked-gated (distributed) cells never alias unmasked measurements,
+    # and the interior/rind split's winners never alias serial ones.
+    assert k_local.endswith("masked=False|overlap=False")
+    assert k_m22_masked.endswith("masked=True|overlap=False")
+    assert k_m22_overlap.endswith("masked=True|overlap=True")
 
 
 def test_best_policy_mesh_cells_are_distinct(tmp_path):
@@ -407,3 +412,43 @@ def test_best_policy_mesh_cells_are_distinct(tmp_path):
     tune.best_policy((34, 130), jnp.float32, jacobi_2d_5pt(), mesh=(2, 2),
                      **kw)
     assert tune.measure_count == n0 + 2  # second mesh call is a cache hit
+
+
+# ---------------------------------------------------------------------------
+# Mesh step model: exchange hidden behind the interior, priced by the sim
+# ---------------------------------------------------------------------------
+
+def test_sim_mesh_exchange_model_overlap_wins_when_exchange_bound():
+    """Wide, thin shards on the e150's PCIe-isolated cards: the halo rides
+    the 1.25 GB/s host link while each 8-row shard's interior is cheap at
+    the simulator's counters-derived rate, so the double-buffered bill
+    (max(exchange, interior) + rind) beats the serial sum — and the grid
+    itself is identical to the single-chip simulation, because the mesh
+    model prices time, never touches numerics."""
+    from repro.core.stencil import make_laplace_problem
+
+    u = make_laplace_problem(64, 2040, dtype=np.float32, left=1.0)
+    kw = dict(policy="rowchunk", iters=2, bm=16, device="grayskull_e150")
+    base = backends.simulate(u, **kw)
+    ser = backends.simulate(u, mesh_shape=(8,), **kw)
+    ovl = backends.simulate(u, mesh_shape=(8,), overlap=True, **kw)
+    assert base.exchange_model is None
+    bill = ovl.exchange_model
+    assert bill is not None and bill.feasible and bill.wins
+    assert ovl.model_time_s < ser.model_time_s
+    assert ser.model_time_s == bill.serial_s
+    assert ovl.model_time_s == bill.overlapped_s
+    # Exchange dominates each round's interior: the regime overlap exists
+    # for, and the acceptance gate for the modeled win.
+    assert bill.exchange_s > bill.interior_s
+    np.testing.assert_array_equal(np.asarray(ovl.grid), np.asarray(ser.grid))
+    np.testing.assert_array_equal(np.asarray(ovl.grid), np.asarray(base.grid))
+
+
+def test_sim_mesh_rejects_undecomposable_grid():
+    from repro.core.stencil import make_laplace_problem
+
+    u = make_laplace_problem(30, 66, dtype=np.float32)
+    with pytest.raises(backends.BackendError, match="does not decompose"):
+        backends.simulate(u, policy="rowchunk", iters=1, mesh_shape=(4,),
+                          device="grayskull_e150")

@@ -38,14 +38,35 @@ def test_table7_emits_fused_schedule_rows():
     from benchmarks import table7_core_scaling as t7
 
     rows = t7.run()
-    fused = [r for r in rows if "_fused_t8" in r]
-    unfused = [r for r in rows if "_fused_t1" in r]
+    fused = [r for r in rows if r.split(",")[0].endswith("_fused_t8")]
+    unfused = [r for r in rows if r.split(",")[0].endswith("_fused_t1")]
     assert fused and unfused, rows
     for r in fused:
         derived = r.split(",", 2)[2]
         assert "exchanges=2" in derived and "halo_depth=8" in derived, r
     # Fusion must cut the modeled DRAM traffic relative to t=1.
     assert "bytes_pt=0.50" in fused[0] and "bytes_pt=4.00" in unfused[0]
+
+
+def test_table7_emits_overlapped_rows():
+    """Table VII must price the exchange-hiding split next to the serial
+    cadence rows, for the v5e and for the e150 (whose PCIe-isolated cards
+    bill the halo over the host link — the paper's multi-card gap)."""
+    from benchmarks import table7_core_scaling as t7
+
+    rows = t7.run()
+    ovl = [r for r in rows if r.split(",")[0].endswith("_overlapped")]
+    assert any(r.startswith("v5e_") for r in ovl), rows
+    e150 = [r for r in ovl if r.startswith("e150_")]
+    assert e150, rows
+    for r in ovl:
+        derived = r.split(",", 2)[2]
+        assert "model_serial_us=" in derived
+        assert "model_overlapped_us=" in derived
+        assert "wins=" in derived
+    # Deep-halo exchange on the host link is the regime overlap exists
+    # for: the e150 t=8 rows must show the overlapped bill winning.
+    assert all("wins=overlap" in r for r in e150 if "_fused_t8_" in r), e150
 
 
 def test_table8_traffic_comes_from_registry():
@@ -63,3 +84,66 @@ def test_table8_traffic_comes_from_registry():
     for p in engine.registry():
         t = t8.T if p.fused else 1
         assert got[p.name] == p.bytes_per_point(spec, db, t)
+
+
+def test_bench_dist_dry_rows_and_json(tmp_path):
+    """The distributed-halo bench must price every (mesh, t) case serial
+    AND overlapped in dry mode (measured_us stays 0.0), write the tracked
+    BENCH_dist.json shape, and contain at least one case where the
+    overlapped bill wins — the perf trajectory the tentpole is for."""
+    import json
+
+    from benchmarks import bench_dist
+
+    rows = bench_dist.collect()
+    assert rows
+    for rec in rows:
+        assert rec["modeled_serial_us"] > 0
+        assert rec["modeled_overlapped_us"] > 0
+        assert rec["measured_serial_us"] == 0.0  # dry: no subprocess
+        assert rec["measured_overlapped_us"] == 0.0
+        if rec["overlap_wins"]:
+            assert rec["modeled_overlapped_us"] < rec["modeled_serial_us"]
+    assert any(rec["overlap_wins"] for rec in rows)
+    assert any(not rec["overlap_wins"] for rec in rows), \
+        "the matrix should include a case where serial honestly wins"
+
+    payload = bench_dist.write_json(str(tmp_path / "BENCH_dist.json"), rows)
+    with open(tmp_path / "BENCH_dist.json") as f:
+        on_disk = json.load(f)
+    assert on_disk == json.loads(json.dumps(payload))
+    assert on_disk["bench"] == "dist_halo_overlap"
+    assert on_disk["device"] == "grayskull_e150"
+    assert len(on_disk["rows"]) == len(bench_dist.CASES)
+
+    csv = bench_dist.run(rows)
+    assert len(csv) == 2 * len(rows)
+    for line in csv:
+        parts = line.split(",")
+        assert len(parts) == 3
+        float(parts[1])
+    assert any("_serial" in line for line in csv)
+    assert any("_overlapped" in line for line in csv)
+
+
+def test_bench_dist_checked_in_json_is_fresh():
+    """The committed BENCH_dist.json must match the current model — if a
+    schedule or device-model change moves the bills, regenerate it with
+    ``python -m benchmarks.bench_dist``."""
+    import json
+    import os
+
+    from benchmarks import bench_dist
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_dist.json")
+    with open(path) as f:
+        committed = json.load(f)
+    current = {r["name"]: r for r in bench_dist.collect()}
+    assert len(committed["rows"]) == len(current)
+    for rec in committed["rows"]:
+        want = current[rec["name"]]
+        for key in ("halo_bytes", "overlap_feasible", "overlap_wins"):
+            assert rec[key] == want[key], (rec["name"], key)
+        for key in ("modeled_serial_us", "modeled_overlapped_us"):
+            assert rec[key] == pytest.approx(want[key]), (rec["name"], key)

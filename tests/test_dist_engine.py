@@ -12,6 +12,10 @@ t in {2, 3} (divisible and remainder cases) for the face and diagonal-tap
 specs: the masked temporal kernel advances all t sweeps per shard between
 exchanges, and ``engine.plan_distributed`` must report the exchange count
 the schedule implies (iters // t fused + one remainder round).
+
+A third matrix forces the exchange-hiding interior/rind overlap on and
+off (2 meshes x {jacobi5, diag9} x t in {1, 3}): both modes must stay
+bit-exact — overlap reorders the launch, never the arithmetic.
 """
 import os
 import subprocess
@@ -74,6 +78,31 @@ for spec, name in [(jacobi_2d_5pt(), "jacobi5"), (diag9, "diag9")]:
                   f"exchanges={sched.exchanges}"
             print(("ok   " if exact else "FAIL ") + tag)
             failures += not exact
+
+# Exchange-hiding interior/rind split: forced on AND forced off must be
+# bit-exact vs the single-device oracle. The split is a schedule-level
+# rewrite — interior launched while the exchange is in flight, rind strips
+# patched in after — of the SAME f32 tap accumulation, so diagonal-tap
+# corner transport included, fp32 equality is exact, not approximate.
+for spec, name in [(jacobi_2d_5pt(), "jacobi5"), (diag9, "diag9")]:
+    want = np.asarray(engine.run(u, spec, policy="rowchunk", iters=ITERS))
+    for mesh_shape, axes in [((4,), ("x",)), ((2, 2), ("x", "y"))]:
+        mesh = jax.make_mesh(mesh_shape, axes)
+        for t in (1, 3):
+            policy = "temporal" if t > 1 else "rowchunk"
+            for ovl in (True, False):
+                sched, _, _ = engine.plan_distributed(
+                    u.shape, u.dtype, spec, mesh=mesh, policy=policy,
+                    iters=ITERS, t=t, overlap=ovl)
+                assert sched.overlap is ovl, sched
+                got = np.asarray(engine.run_distributed(
+                    u, spec, mesh=mesh, policy=policy, iters=ITERS, t=t,
+                    overlap=ovl))
+                exact = bool((got == want).all())
+                tag = (f"{name} mesh={mesh_shape} {policy} t={t} "
+                       f"overlap={'on' if ovl else 'off'}")
+                print(("ok   " if exact else "FAIL ") + tag)
+                failures += not exact
 
 # Non-dyadic weights: XLA fusion may differ by 1 ulp between programs.
 adv = advection_2d_3pt()

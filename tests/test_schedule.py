@@ -16,7 +16,8 @@ from repro import engine
 from repro.core.stencil import jacobi_2d_5pt, make_laplace_problem
 from repro.engine.plan import PlanError
 from repro.engine.schedule import (DEFAULT_REMAINDER_POLICY, SweepSchedule,
-                                   build_schedule, effective_depth)
+                                   build_schedule, effective_depth,
+                                   price_exchange)
 
 SPEC = jacobi_2d_5pt()
 SHAPE = (34, 66)
@@ -217,4 +218,112 @@ def test_run_distributed_fused_matches_engine_run_single_shard():
     want = np.asarray(engine.run(u, policy="rowchunk", iters=6))
     got = np.asarray(engine.run_distributed(
         u, mesh=_mesh1(), policy="temporal", iters=6, t=3, row_axis="x"))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# overlap: the exchange-hiding interior/rind split, priced end to end
+# ---------------------------------------------------------------------------
+
+def test_price_exchange_overlap_wins_when_exchange_bound():
+    """Wide, thin shards on the e150: its PCIe-isolated cards bill the
+    t*r-deep halo over the 1.25 GB/s host link (``mesh_direct_links=False``
+    -> ``halo_link_bw``), while an 8-row shard's interior is cheap — so
+    ``max(exchange, interior) + rind`` beats ``exchange + compute``."""
+    shard = (128 + 2, 2040 + 2)
+    sched = build_schedule(2, spec=SPEC, shape=shard, dtype=DTYPE,
+                           policy="rowchunk", t=1, device="grayskull_e150",
+                           exchange_cadence=True)
+    bill = price_exchange(sched, shard_shape=shard, dtype=DTYPE, spec=SPEC,
+                          device="grayskull_e150", mesh_shape=(8,))
+    assert bill.feasible and bill.wins
+    assert bill.overlapped_s < bill.serial_s
+    # The bill's own arithmetic: serial is the unhidden sum, overlapped
+    # hides the exchange under the interior and pays the rind after.
+    assert bill.serial_s == pytest.approx(bill.exchange_s + bill.compute_s)
+    assert bill.overlapped_s == pytest.approx(
+        max(bill.exchange_s, bill.interior_s) + bill.rind_s)
+    assert "overlap wins" in bill.describe()
+
+
+def test_price_exchange_serial_wins_when_compute_bound():
+    """A small, chunky shard on the host model: the rind's ~3x-redundant
+    recompute costs more than the short exchange it hides."""
+    shard = (14, 70)
+    sched = build_schedule(3, spec=SPEC, shape=shard, dtype=DTYPE,
+                           policy="rowchunk", t=3, exchange_cadence=True)
+    bill = price_exchange(sched, shard_shape=shard, dtype=DTYPE, spec=SPEC,
+                          mesh_shape=(4,))
+    assert bill.feasible and not bill.wins
+    assert bill.overlapped_s >= bill.serial_s
+    assert "serial wins" in bill.describe()
+
+
+def test_price_exchange_infeasible_falls_back_to_serial():
+    """A shard thinner than twice the halo depth has no halo-independent
+    interior; the bill must say so and price overlapped as serial."""
+    shard = (8 + 2 * 4, 64 + 2 * 4)  # hl = 8 = 2*d at t=4
+    sched = build_schedule(4, spec=SPEC, shape=shard, dtype=DTYPE,
+                           policy="temporal", t=4, exchange_cadence=True)
+    bill = price_exchange(sched, shard_shape=shard, dtype=DTYPE, spec=SPEC,
+                          mesh_shape=(4,))
+    assert not bill.feasible and not bill.wins
+    assert bill.overlapped_s == bill.serial_s
+
+
+def test_build_schedule_resolves_overlap_by_price():
+    """``overlap=None`` under exchange_cadence consults the bill: the
+    exchange-bound e150 geometry turns the split on, the compute-bound
+    host geometry leaves it off — and describe() says which."""
+    on = build_schedule(2, spec=SPEC, shape=(130, 2042), dtype=DTYPE,
+                        policy="rowchunk", t=1, device="grayskull_e150",
+                        mesh_shape=(8,), exchange_cadence=True)
+    off = build_schedule(3, spec=SPEC, shape=(14, 70), dtype=DTYPE,
+                         policy="rowchunk", t=3, mesh_shape=(4,),
+                         exchange_cadence=True)
+    assert on.overlap and not off.overlap
+    assert "overlapped" in on.describe()
+    assert "overlapped" not in off.describe()
+
+
+def test_overlap_forced_and_gated():
+    s_on = _sched(4, policy="rowchunk", exchange_cadence=True, overlap=True)
+    s_off = _sched(4, policy="rowchunk", exchange_cadence=True, overlap=False)
+    assert s_on.overlap and not s_off.overlap
+    # A single-device schedule has no exchange to hide.
+    with pytest.raises(PlanError, match="exchange_cadence"):
+        _sched(4, policy="rowchunk", overlap=True)
+
+
+def test_distributed_tuned_keys_bucket_overlap(tmp_path, monkeypatch):
+    """Satellite regression: the tuned cache key must fold ``overlap`` in,
+    so the winner measured for the interior/rind launch geometry never
+    aliases the serial one (their kernel launch shapes differ)."""
+    from repro.engine import tune
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    tune.clear()
+    u = make_laplace_problem(16, 32, dtype=DTYPE)
+    want = np.asarray(engine.run(u, policy="rowchunk", iters=6))
+    for ovl in (False, True):
+        got = engine.run_distributed(u, mesh=_mesh1(), policy="tuned",
+                                     iters=6, t=3, row_axis="x", overlap=ovl)
+        np.testing.assert_array_equal(np.asarray(got), want)
+    with open(tmp_path / "tune.json") as f:
+        keys = list(json.load(f))
+    assert any("overlap=True" in k for k in keys), keys
+    assert any("overlap=False" in k for k in keys), keys
+    tune.clear()
+
+
+def test_run_distributed_overlap_single_shard_bitexact():
+    """Even with nothing to exchange (one shard), forcing the split must
+    stay bit-exact — the interior/rind stitch is pure reordering."""
+    u = make_laplace_problem(16, 32, dtype=DTYPE)
+    u = u.at[1:-1, 1:-1].set(
+        jax.random.uniform(jax.random.PRNGKey(5), (16, 32)))
+    want = np.asarray(engine.run(u, policy="rowchunk", iters=6))
+    got = np.asarray(engine.run_distributed(
+        u, mesh=_mesh1(), policy="temporal", iters=6, t=3, row_axis="x",
+        overlap=True))
     np.testing.assert_array_equal(got, want)
