@@ -1,0 +1,50 @@
+"""Static verification of Tensix IR programs and sweep schedules.
+
+The backends' correctness contract — reader/compute/writer kernels that
+communicate only through circular buffers — was previously checked
+*dynamically*: ``sim.py`` raises ``CBOverflowError``/``CBUnderflowError``
+mid-run, and real hardware would simply hang. This package proves the
+protocol statically, before anything executes:
+
+* :mod:`repro.analysis.verify` — abstract interpretation of every
+  kernel's push/pop sequence (exact per-CB occupancy intervals,
+  overflow/underflow counterexamples), cross-kernel deadlock detection,
+  block-relative address-bounds checking for *all* block indices, and
+  device budget validation. ``backends.lower`` gates every lowering on
+  it and ``backends.sim.run_program`` refuses rejected programs, so
+  verifier-accepted ⇒ simulator-clean (property-tested).
+* :mod:`repro.analysis.feasibility` — :func:`check_schedule`, the one
+  diagnostic engine for the gates that used to be scattered across the
+  executors (overlap feasibility, masked-remainder refusal, mesh
+  decomposition, remainder-policy validation).
+* :mod:`repro.analysis.sweep` — the cross-product verify sweep behind
+  ``python -m repro.analysis``, the CI gate: every registry policy x
+  spec x dtype x device x t x masked/overlap lowering must verify clean.
+* :mod:`repro.analysis.diagnostics` — the shared
+  ``Diagnostic(severity, code, span, message, hint)`` records and
+  :class:`Report`, with the stable code vocabulary in
+  :data:`~repro.analysis.diagnostics.CODES`.
+
+Typical use::
+
+    from repro import analysis
+    report = analysis.verify_program(prog)     # prog: TensixProgram
+    print(report.describe())                   # empty report == proven
+    analysis.check_schedule(sched, shape=u.shape, spec=spec,
+                            mesh_shape=(4,), program=prog)
+"""
+from repro.analysis.diagnostics import (  # noqa: F401
+    CODES,
+    Diagnostic,
+    Report,
+    budget_message,
+)
+from repro.analysis.verify import (  # noqa: F401
+    CBBounds,
+    MAX_ITERATIONS,
+    occupancy_bounds,
+    raise_if_rejected,
+    verify_program,
+)
+from repro.analysis.feasibility import check_schedule  # noqa: F401
+from repro.analysis.sweep import Cell, run_sweep  # noqa: F401

@@ -286,18 +286,35 @@ class TensixProgram:
                 produced.add(op.dst)
 
     def describe(self) -> str:
-        """Human-readable IR dump (the README example is one of these)."""
+        """Human-readable IR dump (the README example is one of these).
+
+        Each CB line carries its feeding DRAM stream when that stream is
+        not the grid (the masked-temporal pin stream reads distinctly from
+        the data path) and, when the static verifier can interpret the
+        program, its exact occupancy interval ``occ[min,max]/capacity``.
+        """
         p = self.plan
         lines = [f"program {self.policy} grid={p.shape} dtype={p.dtype} "
                  f"bm={p.bm} t={p.t} "
                  f"{'tilized' if self.tilized else 'row-major'} "
                  f"sram={self.sram_bytes / 1024:.0f}KiB"]
+        streams = {op.cb: op.src for op in self.reader
+                   if isinstance(op, ReadBlock) and op.src != "grid"}
+        try:  # deferred: analysis imports this module
+            from repro.analysis.verify import occupancy_bounds
+            bounds = occupancy_bounds(self) or {}
+        except Exception:
+            bounds = {}
         for cb in self.cbs:
-            lines.append(
-                f"  cb {cb.name:8s} {cb.capacity_tiles:4d} tiles "
-                f"({cb.tile_rows}x{cb.tile_cols} {cb.dtype}, "
-                f"{cb.slots} slot{'s' if cb.slots > 1 else ''}, "
-                f"{cb.sram_bytes / 1024:.0f}KiB)")
+            line = (f"  cb {cb.name:8s} {cb.capacity_tiles:4d} tiles "
+                    f"({cb.tile_rows}x{cb.tile_cols} {cb.dtype}, "
+                    f"{cb.slots} slot{'s' if cb.slots > 1 else ''}, "
+                    f"{cb.sram_bytes / 1024:.0f}KiB)")
+            if cb.name in streams:
+                line += f" <- {streams[cb.name]} stream"
+            if cb.name in bounds:
+                line += f" {bounds[cb.name].describe()}"
+            lines.append(line)
         for kname, ops in (("reader", self.reader), ("compute", self.compute),
                            ("writer", self.writer)):
             lines.append(f"  {kname}:")

@@ -187,18 +187,13 @@ def lower_plan(plan: ExecutionPlan, *, tilized: bool | None = None
                          cbs=tuple(cbs), reader=reader, compute=compute,
                          writer=writer, tilized=bool(tilized))
     prog.validate()
-    if len(prog.cbs) > dev.cb_count:
-        raise LoweringError(
-            f"policy {plan.policy!r} needs {len(prog.cbs)} circular buffers "
-            f"({', '.join(c.name for c in prog.cbs)}); {dev.name} has "
-            f"{dev.cb_count} per core")
-    if prog.sram_bytes > dev.fast_memory_bytes:
-        raise LoweringError(
-            f"policy {plan.policy!r} CB layout needs "
-            f"{prog.sram_bytes / 2**20:.2f} MiB of SRAM "
-            f"(tile padding + {max(c.slots for c in prog.cbs)}-slot CBs); "
-            f"{dev.name} has {dev.fast_memory_mib:.2f} MiB per core — "
-            f"lower bm or t")
+    # Every lowering is gated on the static verifier: CB protocol
+    # (overflow/underflow/deadlock), address bounds for all block indices,
+    # and the device SRAM/CB-file budgets that used to be inline here.
+    from repro.analysis.verify import verify_program
+    report = verify_program(prog)
+    if not report.ok:
+        raise LoweringError(report.describe())
     return prog
 
 

@@ -369,6 +369,8 @@ def run_program(u: np.ndarray, prog: TensixProgram, *,
     cumulative when ``core_times`` is passed in). ``mask`` supplies the
     pin-mask DRAM stream masked-temporal programs read.
     """
+    from repro.analysis.verify import raise_if_rejected
+    raise_if_rejected(prog)
     dev = prog.plan.device
     nblocks = prog.plan.nblocks
     ncores = min(nblocks, dev.cores)
@@ -451,14 +453,14 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
     sched = build_schedule(iters, spec=spec, shape=shape, dtype=dtype,
                            policy=policy, t=t, bm=bm, interpret=True,
                            device=device, remainder_policy=remainder_policy)
-    if mask_np is not None and (not sched.fused or sched.remainder):
-        # Only fused blocks honor the pin mask; a non-fused policy (or the
-        # non-fused remainder sweeps) would silently re-pin the geometric
-        # ring instead of the mask — refuse rather than model the wrong
-        # schedule.
-        raise BackendError(
-            f"mask requires a fully-fused schedule; got {sched.describe()} "
-            f"(pick a fused policy and iters divisible by t)")
+    # Feasibility gates (masked-remainder, remainder policy, mesh
+    # decomposition) live in the shared static checker; refuse with its
+    # diagnostics rather than model the wrong schedule.
+    from repro.analysis.feasibility import check_schedule
+    check_schedule(sched, shape=shape, dtype=dtype, spec=spec,
+                   device=device, mesh_shape=mesh_shape,
+                   masked=mask_np is not None
+                   ).raise_if_errors(BackendError)
 
     programs = []
     prog_reps: list[tuple[TensixProgram, int]] = []

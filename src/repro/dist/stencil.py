@@ -59,6 +59,7 @@ from repro.core.decomp import check_divisible, split_ringed_bands
 from repro.core.halo import exchange_cols, exchange_rows
 from repro.core.stencil import StencilSpec
 from repro.dist._compat import shard_map
+from repro.engine.schedule import overlap_feasible
 
 
 def _pad_outward(band: jax.Array, d: int, axis: int, leading: bool):
@@ -120,7 +121,7 @@ def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
         raise ValueError(
             f"halo depth {d} (t={t} sweeps x radius {r}) exceeds local "
             f"block {u.shape}; lower t or use more rows/cols per shard")
-    overlap = overlap and hl > 2 * d and wl > 2 * d
+    overlap = overlap and overlap_feasible(hl, wl, d)
     if overlap:
         # Interior launch, issued before the exchange: after t sweeps the
         # cells >= d from the shard edge are exact (the near-edge cells

@@ -160,11 +160,13 @@ def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
     win, vmem = _window_and_vmem(policy, shape, jnp.dtype(dtype).itemsize,
                                  spec, bm, t, masked)
     if vmem > device.fast_memory_bytes:
+        # Lazy import: diagnostics is stdlib-only, but keep the planner's
+        # import graph free of repro.analysis on the happy path.
+        from repro.analysis.diagnostics import budget_message
         raise PlanError(
-            f"policy {policy!r} needs ~{vmem / 2**20:.2f} MiB of fast memory "
-            f"for grid {shape} (bm={bm}, t={t}); {device.name} has "
-            f"{device.fast_memory_mib:.2f} MiB per core — lower bm or t, "
-            f"or plan for a device with more fast memory")
+            budget_message(f"policy {policy!r} for grid {shape} "
+                           f"(bm={bm}, t={t})", vmem, device)
+            + " — lower bm or t, or plan for a device with more fast memory")
     return ExecutionPlan(policy=policy, shape=shape, dtype=dtype, spec=spec,
                          bm=bm, t=t, window_rows=win, vmem_bytes=vmem,
                          device=device, masked=masked)

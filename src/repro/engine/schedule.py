@@ -44,6 +44,19 @@ from repro.engine.plan import DEFAULT_T, PlanError
 DEFAULT_REMAINDER_POLICY = "rowchunk"
 
 
+def overlap_feasible(hl: int, wl: int, depth: int, nshards: int = 2) -> bool:
+    """Whether a ``(hl, wl)``-interior shard can hide a depth-``depth``
+    exchange behind halo-independent compute.
+
+    The single home of the ``hl > 2d and wl > 2d`` gate that used to be
+    inlined in ``dist.stencil._local_sweeps``, ``_price_rounds`` *and*
+    re-derived by callers: the interior launch is nonempty only when the
+    shard extends beyond the ``2*depth`` band the rind strips recompute,
+    and a single-shard mesh has no exchange to hide at all.
+    """
+    return nshards > 1 and hl > 2 * depth and wl > 2 * depth
+
+
 def effective_depth(iters: int, t: int | None,
                     default: int = DEFAULT_T) -> int:
     """The realized fusion depth: the request clamped into ``[1, iters]``.
@@ -167,7 +180,7 @@ def _price_rounds(rounds, *, d_max: int, radius: int, taps: int,
     mesh_shape = tuple(mesh_shape) if mesh_shape else (1,)
     px = int(mesh_shape[0])
     py = int(mesh_shape[1]) if len(mesh_shape) > 1 else 1
-    feasible = px * py > 1 and hl > 2 * d_max and wl > 2 * d_max
+    feasible = overlap_feasible(hl, wl, d_max, px * py)
 
     def compute_s(area: int, sweeps: int) -> float:
         if compute_rate is not None and compute_rate > 0:

@@ -62,6 +62,10 @@ def main():
                          "price it against --device-model")
     ap.add_argument("--check", action="store_true",
                     help="verify against the single-device reference")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify the chosen schedule (and, when "
+                         "the policy lowers, the Tensix program) before "
+                         "execution and print the diagnostic report")
     args = ap.parse_args()
 
     from repro import engine
@@ -77,6 +81,33 @@ def main():
     u0 = make_laplace_problem(args.ny, args.nx, dtype=dtype,
                               left=1.0, right=0.0)
 
+    def _verify(policy, t_fuse, mesh_shape=None):
+        """Static pre-flight: schedule feasibility + program protocol."""
+        from repro.analysis import check_schedule
+        from repro.backends.lower import (LoweringError, lower,
+                                          lowerable_policies)
+        from repro.core.stencil import jacobi_2d_5pt
+        spec = jacobi_2d_5pt()
+        sched = engine.build_schedule(
+            args.iters, spec=spec, shape=u0.shape, dtype=u0.dtype,
+            policy=policy, t=t_fuse, device=device,
+            mesh_shape=mesh_shape, exchange_cadence=mesh_shape is not None)
+        prog = None
+        if sched.policy in lowerable_policies():
+            try:
+                prog = lower(u0.shape, u0.dtype, spec, sched.policy,
+                             t=sched.t if sched.fused else None,
+                             device=device)
+            except LoweringError as e:
+                print(f"verify: lowering rejected — {e}")
+                raise SystemExit(1)
+        report = check_schedule(sched, shape=u0.shape, dtype=u0.dtype,
+                                spec=spec, device=device,
+                                mesh_shape=mesh_shape, program=prog)
+        print(f"verify: {report.describe()}")
+        if not report.ok:
+            raise SystemExit(1)
+
     if args.backend == "sim":
         # Lower to the decoupled reader/compute/writer program and run the
         # functional simulator: numbers + modeled cost, no XLA involved.
@@ -89,6 +120,8 @@ def main():
         if policy in ("ref", "reference"):
             policy = "rowchunk"  # the oracle has no lowering; use §VI
         t_fuse = args.t if args.t is not None else args.temporal
+        if args.verify:
+            _verify(policy, t_fuse)
         t0 = time.perf_counter()
         res = backends.simulate(u0, policy=policy, iters=args.iters,
                                 t=t_fuse, device=device)
@@ -136,6 +169,8 @@ def main():
         # sweeps per shard in one kernel between t*r-deep exchanges.
         t_fuse = args.t if args.t is not None else args.depth
         overlap = {"auto": None, "on": True, "off": False}[args.overlap]
+        if args.verify:
+            _verify(policy, t_fuse, mesh_shape=(args.devices,))
         sched, shard_shape, _ = engine.plan_distributed(
             u0.shape, u0.dtype, mesh=mesh, policy=policy, iters=args.iters,
             t=t_fuse, row_axis="x", device=device, overlap=overlap)
@@ -164,6 +199,8 @@ def main():
             run = jax.jit(lambda u: J.jacobi_run(u, args.iters))
         else:
             t_fuse = args.t if args.t is not None else args.temporal
+            if args.verify:
+                _verify(policy, t_fuse)
             run = jax.jit(lambda u: engine.run(
                 u, policy=policy, iters=args.iters, t=t_fuse,
                 device=device))

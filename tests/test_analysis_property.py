@@ -1,0 +1,46 @@
+"""Property test (hypothesis): verifier-accepted => simulator-clean.
+
+The README's guarantee, fuzzed: for any (shape, policy, t, bm) the
+registry can lower, the static verifier accepts the program and the
+functional simulator then executes it without a single circular-buffer
+protocol error. (``pytest.importorskip`` keeps the module collectable on
+machines without hypothesis installed; ``tests/test_analysis.py`` runs a
+seeded sweep of the same property unconditionally.)
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import analysis, backends  # noqa: E402
+from repro.backends.lower import (LoweringError, lower,  # noqa: E402
+                                  lowerable_policies)
+from repro.core.stencil import jacobi_2d_5pt, laplace_2d_9pt  # noqa: E402
+from repro.engine.plan import PlanError  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ny=st.integers(min_value=5, max_value=48),
+    nx=st.integers(min_value=5, max_value=64),
+    policy=st.sampled_from(lowerable_policies()),
+    spec=st.sampled_from([jacobi_2d_5pt(), laplace_2d_9pt()]),
+    t=st.integers(min_value=1, max_value=5),
+    bm=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_accepted_implies_sim_clean(ny, nx, policy, spec, t, bm, seed):
+    try:
+        prog = lower((ny, nx), jnp.float32, spec, policy, t=t, bm=bm,
+                     device="grayskull_e150")
+    except (LoweringError, PlanError):
+        return  # the planner/verifier refused: nothing to run
+    assert analysis.verify_program(prog).ok
+    u = np.random.default_rng(seed).random((ny, nx)).astype(np.float32)
+    # Must complete without CBOverflowError/CBUnderflowError/deadlock.
+    out, counters, _ = backends.sim.run_program(u, prog)
+    assert out.shape == u.shape
+    assert counters.blocks == prog.plan.nblocks

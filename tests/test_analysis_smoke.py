@@ -1,0 +1,28 @@
+"""Tier-1 smoke for the CI verification gate.
+
+CI runs ``python -m repro.analysis --all`` as a hard step; this test runs
+the same sweep in-process (default lane, which covers every registry
+policy on both paper-relevant devices) so the gate cannot rot without a
+test failing first, and pins the CLI's exit-code contract.
+"""
+from repro.analysis.sweep import run_sweep
+
+
+def test_default_lane_sweep_has_zero_error_cells():
+    cells = run_sweep(ts=(1, 3))
+    assert cells, "sweep enumerated nothing"
+    bad = [c for c in cells if c.outcome == "error"]
+    assert not bad, "\n".join(c.describe() for c in bad)
+    verified = [c for c in cells if c.outcome == "verified"]
+    # Every registry policy must contribute at least one verified cell.
+    assert {c.policy for c in verified} == {"shifted", "rowchunk", "dbuf",
+                                            "temporal"}
+    # Masked and overlapped schedules are part of the swept surface.
+    assert any(c.masked for c in verified)
+    assert any(c.overlap for c in verified)
+
+
+def test_cli_exit_contract():
+    from repro.analysis.__main__ import main
+    assert main(["--policy", "rowchunk", "--spec", "jacobi5",
+                 "--device", "grayskull_e150"]) == 0
