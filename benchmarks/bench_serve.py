@@ -1,0 +1,269 @@
+"""Solve-serving benchmark — mixed traffic, batched server vs one-at-a-time.
+
+Tracks the throughput/latency trajectory of the stencil solve server
+(`BENCH_serve.json`): the same mixed workload (two shape buckets,
+tolerances spread over an order of magnitude, a couple of fixed-iteration
+requests, more requests than slots) is run two ways —
+
+* **one-at-a-time** (today's path): one jitted ``engine.run`` launch per
+  request at its *fixed* ``max_iters``, sequential. No residual check, so
+  every request pays its full iteration budget even after converging.
+* **served**: every request through :class:`repro.serve.SolveServer` —
+  admission, bucketing, one vmapped launch per block of ``t`` sweeps,
+  per-slot in-launch residuals, and mid-flight eviction of converged
+  solves (freed slots immediately refill from the queue).
+
+The speedup is dominated by eviction (converged solves stop paying
+sweeps), which is the point: the server turns "fixed ``iters``" into
+"iterations actually needed", and the batch keeps the engine saturated
+while doing so. Sweep accounting (realized vs fixed) is recomputed from
+the pure-jnp oracle in dry mode — the engine kernels are bit-exact
+against it in fp32, so eviction decisions are reproducible without
+timing anything; CI asserts the committed JSON this way.
+
+Run: ``PYTHONPATH=src:. python -m benchmarks.bench_serve [--out PATH]``.
+With ``REPRO_BENCH_DRY=1`` measurement is skipped (measured fields 0.0)
+but the per-request sweep accounting is still computed and checked.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import dry_run, row
+
+DTYPE = "float32"
+T = 64             # block cadence: sweeps per launch / residual check
+MAX_SLOTS = 8
+REPEATS = 3        # min-of-N timing for both passes (noise floor)
+
+# Mixed traffic: (name, interior shape, policy, tol, max_iters).  Two
+# buckets (different grid shapes), tolerances spread over an order of
+# magnitude, two fixed-iteration requests (tol=None), and more
+# requests than slots so the queue + eviction-refill path is exercised.
+# Grids are big enough that sweep compute dominates the per-block host
+# sync, so the timed speedup reflects the sweeps eviction saves. Both
+# buckets use the temporal policy: it is the one kernel whose vmapped
+# batch costs ~1x its solo per-lane time (measured; rowchunk/dbuf/
+# shifted degrade 3-16x per lane under vmap), which makes it the
+# serving policy of choice.
+WORKLOAD = [
+    ("a0", (128, 128), "temporal", 2.6e-3, 1280),
+    ("a1", (128, 128), "temporal", 1.5e-3, 1280),
+    ("a2", (128, 128), "temporal", 1.0e-3, 1280),
+    ("a3", (128, 128), "temporal", 7.0e-4, 1280),
+    ("a4", (128, 128), "temporal", 5.0e-4, 1280),
+    ("a5", (128, 128), "temporal", 4.0e-4, 1280),
+    ("a6", (128, 128), "temporal", 3.0e-4, 1280),
+    ("a7", (128, 128), "temporal", 2.6e-3, 1280),
+    ("a8", (128, 128), "temporal", 8.0e-4, 1280),
+    ("a9", (128, 128), "temporal", None, 256),
+    ("a10", (128, 128), "temporal", 2.2e-3, 1280),
+    ("a11", (128, 128), "temporal", 1.2e-3, 1280),
+    ("b0", (96, 192), "temporal", 2.0e-3, 1280),
+    ("b1", (96, 192), "temporal", 1.0e-3, 1280),
+    ("b2", (96, 192), "temporal", 6.0e-4, 1280),
+    ("b3", (96, 192), "temporal", 3.5e-4, 1280),
+    ("b4", (96, 192), "temporal", 8.0e-4, 1280),
+    ("b5", (96, 192), "temporal", None, 256),
+    ("b6", (96, 192), "temporal", 1.8e-3, 1280),
+    ("b7", (96, 192), "temporal", 9.0e-4, 1280),
+]
+
+
+def _problem(shape):
+    import numpy as np
+
+    from repro.core.stencil import make_laplace_problem
+    return make_laplace_problem(*shape, dtype=np.float32, left=1.0)
+
+
+def _realized_sweeps(shape, tol, max_iters) -> int:
+    """Sweeps the server actually runs for one request, from the oracle.
+
+    Mirrors the eviction rule exactly: blocks of ``T`` sweeps, evict at
+    the first block boundary whose max-norm update delta is <= tol, cap
+    at ``(max_iters // T) * T``. The engine kernels are bit-exact vs the
+    oracle in fp32, so this is the served trajectory, not a model.
+    """
+    from repro import engine
+    from repro.core.stencil import apply_stencil, jacobi_2d_5pt
+
+    spec = jacobi_2d_5pt()
+    res_fn = engine.residual_for(spec)
+    u = _problem(shape)
+    done = 0
+    for _ in range(max_iters // T):
+        for _ in range(T):
+            u = apply_stencil(u, spec)
+        done += T
+        if tol is not None and float(res_fn(u)) <= tol:
+            break
+    return done
+
+
+def _percentile(xs, q) -> float:
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, dtype=float), q))
+
+
+def _measure_solo() -> tuple[float, list[float]]:
+    """One jitted fixed-iters ``engine.run`` launch per request,
+    sequential (today's path). Returns (total_s, per-request latency_s
+    from workload start)."""
+    import jax
+
+    from repro import engine
+    from repro.core.stencil import jacobi_2d_5pt
+
+    spec = jacobi_2d_5pt()
+    fns, grids = [], []
+    for _name, shape, policy, _tol, max_iters in WORKLOAD:
+        u = _problem(shape)
+        fn = jax.jit(lambda v, p=policy, n=max_iters: engine.run(
+            v, spec, policy=p, iters=n, t=T, interpret=True))
+        jax.block_until_ready(fn(u))   # warm the jit cache (both paths do)
+        fns.append(fn)
+        grids.append(u)
+    best = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        lat = []
+        for fn, u in zip(fns, grids):
+            jax.block_until_ready(fn(u))
+            lat.append(time.perf_counter() - t0)
+        total = time.perf_counter() - t0
+        if best is None or total < best[0]:
+            best = (total, lat)
+    return best
+
+
+def _measure_served() -> tuple[float, list[float], list, dict]:
+    """The same workload through the solve server. Returns
+    (total_s, latencies_s, requests, stats)."""
+    from repro.core.stencil import jacobi_2d_5pt
+    from repro.serve import SolveRequest, SolveServer
+
+    spec = jacobi_2d_5pt()
+
+    def build():
+        srv = SolveServer(max_slots=MAX_SLOTS)
+        reqs = [SolveRequest(grid=_problem(shape), spec=spec, tol=tol,
+                             max_iters=max_iters, policy=policy, t=T)
+                for _name, shape, policy, tol, max_iters in WORKLOAD]
+        return srv, reqs
+
+    srv, reqs = build()        # warm pass: pays jit tracing for every
+    srv.solve(reqs)            # bucket block shape, like the solo warmup
+    best = None
+    for _ in range(REPEATS):
+        srv, reqs = build()
+        t0 = time.perf_counter()
+        srv.solve(reqs)
+        total = time.perf_counter() - t0
+        if best is None or total < best[0]:
+            best = (total, [r.latency_s for r in reqs], reqs, srv.stats())
+    return best
+
+
+def collect() -> dict:
+    rows = []
+    for name, shape, policy, tol, max_iters in WORKLOAD:
+        realized = _realized_sweeps(shape, tol, max_iters)
+        rows.append({
+            "name": name, "interior": list(shape), "policy": policy,
+            "tol": tol, "max_iters": max_iters,
+            "fixed_sweeps": max_iters, "realized_sweeps": realized,
+            "solo_latency_ms": 0.0, "served_latency_ms": 0.0,
+        })
+    agg = {
+        "n_requests": len(WORKLOAD),
+        "fixed_sweeps": sum(r["fixed_sweeps"] for r in rows),
+        "realized_sweeps": sum(r["realized_sweeps"] for r in rows),
+        "one_at_a_time_s": 0.0, "server_s": 0.0, "speedup": 0.0,
+        "solo_requests_per_s": 0.0, "served_requests_per_s": 0.0,
+        "solo_p50_ms": 0.0, "solo_p95_ms": 0.0,
+        "served_p50_ms": 0.0, "served_p95_ms": 0.0,
+        "launches": 0, "evicted_early": 0, "buckets": 0,
+    }
+    agg["sweeps_saved_frac"] = 1.0 - (agg["realized_sweeps"]
+                                      / agg["fixed_sweeps"])
+    if not dry_run():
+        solo_s, solo_lat = _measure_solo()
+        served_s, served_lat, reqs, stats = _measure_served()
+        for rec, sl, vl, req in zip(rows, solo_lat, served_lat, reqs):
+            rec["solo_latency_ms"] = sl * 1e3
+            rec["served_latency_ms"] = vl * 1e3
+            assert req.iters_done == rec["realized_sweeps"], \
+                (rec["name"], req.iters_done, rec["realized_sweeps"])
+        agg.update({
+            "one_at_a_time_s": solo_s, "server_s": served_s,
+            "speedup": solo_s / served_s,
+            "solo_requests_per_s": len(WORKLOAD) / solo_s,
+            "served_requests_per_s": len(WORKLOAD) / served_s,
+            "solo_p50_ms": _percentile(solo_lat, 50) * 1e3,
+            "solo_p95_ms": _percentile(solo_lat, 95) * 1e3,
+            "served_p50_ms": _percentile(served_lat, 50) * 1e3,
+            "served_p95_ms": _percentile(served_lat, 95) * 1e3,
+            "launches": stats["launches"],
+            "evicted_early": stats["evicted_early"],
+            "buckets": stats["buckets"],
+        })
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(data: dict | None = None) -> list[str]:
+    """CSV rows for the benchmarks.run harness (name,us,derived)."""
+    data = collect() if data is None else data
+    out = []
+    for rec in data["rows"]:
+        out.append(row(
+            f"serve_{rec['name']}", rec["served_latency_ms"] * 1e3,
+            f"solo_ms={rec['solo_latency_ms']:.1f};"
+            f"sweeps={rec['realized_sweeps']}/{rec['fixed_sweeps']};"
+            f"tol={rec['tol']}"))
+    agg = data["aggregate"]
+    out.append(row(
+        "serve_aggregate", agg["server_s"] * 1e6,
+        f"solo_s={agg['one_at_a_time_s']:.3f};"
+        f"speedup={agg['speedup']:.2f};"
+        f"sweeps={agg['realized_sweeps']}/{agg['fixed_sweeps']};"
+        f"evicted_early={agg['evicted_early']}"))
+    return out
+
+
+def write_json(out_path: str, data: dict | None = None) -> dict:
+    data = collect() if data is None else data
+    payload = {
+        "bench": "solve_serve",
+        "dtype": DTYPE,
+        "t": T,
+        "max_slots": MAX_SLOTS,
+        "dry": dry_run(),
+        "rows": data["rows"],
+        "aggregate": data["aggregate"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    data = collect()
+    payload = write_json(args.out, data)
+    for line in run(data):
+        print(line, flush=True)
+    agg = payload["aggregate"]
+    print(f"# wrote {args.out}: {agg['n_requests']} requests, "
+          f"speedup={agg['speedup']:.2f}x, sweeps "
+          f"{agg['realized_sweeps']}/{agg['fixed_sweeps']} "
+          f"({agg['sweeps_saved_frac']:.0%} saved)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

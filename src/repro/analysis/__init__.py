@@ -46,5 +46,8 @@ from repro.analysis.verify import (  # noqa: F401
     raise_if_rejected,
     verify_program,
 )
-from repro.analysis.feasibility import check_schedule  # noqa: F401
+from repro.analysis.feasibility import (  # noqa: F401
+    check_bucket,
+    check_schedule,
+)
 from repro.analysis.sweep import Cell, run_sweep  # noqa: F401

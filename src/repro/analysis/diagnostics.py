@@ -57,6 +57,11 @@ CODES: dict[str, str] = {
                                 "exchange behind",
     "SCHED-PROG-MISMATCH": "the program disagrees with the schedule it is "
                            "checked against",
+    # Solve-serving admission (repro.serve.solve).
+    "SCHED-REQUEST-INFEASIBLE": "a solve request cannot be scheduled on "
+                                "the serving device (shape/policy/budget)",
+    "SCHED-BUCKET-MIX": "a request does not match the batching bucket it "
+                        "was routed to (shape/dtype/spec/policy/depth)",
 }
 
 

@@ -28,6 +28,29 @@ def _mesh_dims(mesh_shape) -> tuple[int, int]:
     return (px, py)
 
 
+def check_bucket(expected: dict, got: dict) -> Report:
+    """Field-by-field compatibility of a solve request with its bucket.
+
+    The solve server (:mod:`repro.serve.solve`) batches requests through
+    one vmapped launch, so every slot must agree on the launch's static
+    fields (shape, dtype, spec, resolved policy, block depth, device) —
+    mixing any of them would silently run some slot under another slot's
+    schedule. ``expected`` is the bucket's field dict, ``got`` the
+    request's; every mismatching field becomes one ``SCHED-BUCKET-MIX``
+    error diagnostic, so a rejection names exactly what diverged instead
+    of raising an ad-hoc ValueError.
+    """
+    diags = tuple(
+        error("SCHED-BUCKET-MIX", f"bucket.{field}",
+              f"request has {field}={got.get(field)!r} but the bucket "
+              f"batches {field}={want!r}",
+              hint="route the request through SolveServer.submit, which "
+                   "derives the bucket key from the request's own "
+                   "schedule")
+        for field, want in expected.items() if got.get(field) != want)
+    return Report(diags)
+
+
 def check_schedule(sched: SweepSchedule, *, shape, dtype=None,
                    spec=None, device: "str | DeviceModel | None" = None,
                    mesh_shape: tuple | None = None,

@@ -64,8 +64,10 @@ from repro.engine.dispatch import (  # noqa: F401
     get_policy,
     register_policy,
     registry,
+    residual_for,
     resolve_auto,
     run,
+    run_batched,
     step,
 )
 from repro.engine.distributed import (  # noqa: F401

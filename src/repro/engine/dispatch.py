@@ -185,6 +185,57 @@ def _scan_steps(u: jax.Array, fn: Callable, n: int) -> jax.Array:
     return v
 
 
+def residual_for(spec: StencilSpec | None = None) -> Callable:
+    """Jit-friendly residual evaluator for ``spec``: ``u -> |apply(u)-u|_inf``.
+
+    The one max-norm update-delta every convergence check shares — the
+    solve server's in-launch eviction test, ``launch/solve.py``'s final
+    report, and tests all call the same closure instead of re-deriving
+    the interior slice + max-abs reduction. Batched callers ``vmap`` it
+    over a leading axis (it is pure jnp, so the vmapped form is exactly
+    the per-grid form).
+    """
+    from repro.core.stencil import residual
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    return functools.partial(residual, spec=spec)
+
+
+def run_batched(us: jax.Array, spec: StencilSpec | None = None, *,
+                policy: str = "auto", iters: int = 1, bm: int | None = None,
+                t: int | None = None, interpret: bool | None = None,
+                device: str | DeviceModel | None = None,
+                remainder_policy: str = DEFAULT_REMAINDER_POLICY
+                ) -> jax.Array:
+    """Advance a batch ``(B, H, W)`` of ringed grids ``iters`` sweeps each
+    through ONE launch.
+
+    This is the serving entry: every grid in the batch shares one
+    schedule (same shape/dtype/spec/policy/t — the bucket contract
+    :mod:`repro.serve.solve` enforces at admission), so the whole batch
+    is a single ``vmap`` of :func:`run` — one jitted launch instead of
+    ``B``, and each batch lane is bit-identical to the solo call
+    (``vmap`` of these kernels is elementwise over the leading axis).
+    ``policy="reference"`` runs the pure-jnp oracle (no Pallas), useful
+    for cheap host-side serving and for the benchmark's dry-mode sweep
+    accounting.
+    """
+    if us.ndim != 3:
+        raise PlanError(f"run_batched wants a (B, H, W) batch of ringed "
+                        f"grids; got shape {tuple(us.shape)}")
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    if policy == "reference":
+        from repro.core.stencil import apply_stencil
+        def one(u):
+            return _scan_steps(u, functools.partial(apply_stencil,
+                                                    spec=spec), iters)
+    else:
+        def one(u):
+            return run(u, spec, policy=policy, iters=iters, bm=bm, t=t,
+                       interpret=interpret, device=device,
+                       remainder_policy=remainder_policy)
+    return jax.vmap(one)(us)
+
+
 def run(u: jax.Array, spec: StencilSpec | None = None, *,
         policy: str = "auto", iters: int = 1, bm: int | None = None,
         t: int | None = None, interpret: bool | None = None,

@@ -60,6 +60,16 @@ def main():
                          "rind in after arrival (distributed only; "
                          "bit-exact either way). 'auto' lets the schedule "
                          "price it against --device-model")
+    ap.add_argument("--serve", action="store_true",
+                    help="route the solve through repro.serve.SolveServer "
+                         "as a thin client: admission, bucketing, one "
+                         "vmapped launch per block of t sweeps, and "
+                         "residual-based eviction (with --tol)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="residual tolerance for --serve: the server "
+                         "evicts the solve at the first block whose "
+                         "max-norm update delta is <= TOL instead of "
+                         "running all --iters sweeps")
     ap.add_argument("--check", action="store_true",
                     help="verify against the single-device reference")
     ap.add_argument("--verify", action="store_true",
@@ -108,6 +118,50 @@ def main():
         if not report.ok:
             raise SystemExit(1)
 
+    if args.serve:
+        # Thin client of the solve server: one request through the full
+        # admission -> bucket -> vmapped-launch -> evict lifecycle.
+        from repro.serve import SolveRequest, SolveServer
+        if args.devices > 1 or args.backend != "jax":
+            raise SystemExit("--serve drives the single-device jax engine; "
+                             "drop --devices/--backend")
+        policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
+        if policy in ("ref", "reference"):
+            policy = "reference"
+        t_fuse = args.t if args.t is not None else args.temporal
+        if args.verify and policy != "reference":
+            _verify(policy, t_fuse)
+        server = SolveServer(device=device)
+        req = SolveRequest(grid=u0, tol=args.tol, max_iters=args.iters,
+                           policy=policy, t=t_fuse)
+        server.submit(req)
+        print(f"bucket: {req.key.describe()}  "
+              f"target_blocks={req.target_blocks}")
+        t0 = time.perf_counter()
+        server.drain()
+        dt = time.perf_counter() - t0
+        result = req.result[1:-1, 1:-1]
+        stats = server.stats()
+        gpts = args.ny * args.nx * req.iters_done / dt / 1e9
+        print(f"kernel={args.kernel} serve=1 grid={args.ny}x{args.nx} "
+              f"iters={req.iters_done}/{args.iters} "
+              f"(evicted_early={stats['evicted_early']} "
+              f"launches={stats['launches']})")
+        print(f"wall={dt:.3f}s  GPt/s={gpts:.3f}  "
+              f"residual={req.residual:.3e}  "
+              f"mean={result.mean():.6f}  max={result.max():.6f}")
+        if args.check:
+            from repro.kernels import ref
+            want = u0
+            for _ in range(req.iters_done):
+                want = ref.jacobi_step(want)
+            err = np.abs(result - np.asarray(want)[1:-1, 1:-1]).max()
+            print(f"max |err| vs reference at {req.iters_done} iters: "
+                  f"{err:.3e}")
+            assert err < (1e-4 if dtype == jnp.float32 else 5e-2), err
+            print("CHECK OK")
+        return
+
     if args.backend == "sim":
         # Lower to the decoupled reader/compute/writer program and run the
         # functional simulator: numbers + modeled cost, no XLA involved.
@@ -137,7 +191,8 @@ def main():
               f"model_energy_J={s['energy_j']:.3f} (MODELED)  "
               f"bytes/pt={s['bytes_per_point']:.2f}  "
               f"dram_txns={s['dram_txns']}")
-        print(f"mean={float(result.mean()):.6f}  "
+        sim_res = float(engine.residual_for()(jnp.asarray(res.grid)))
+        print(f"residual={sim_res:.3e}  mean={float(result.mean()):.6f}  "
               f"max={float(result.max()):.6f}")
         if args.check:
             from repro.kernels import ref
@@ -212,10 +267,13 @@ def main():
         result = np.asarray(out)[1:-1, 1:-1]
 
     gpts = args.ny * args.nx * args.iters / dt / 1e9
+    # The converged residual, through the same engine helper the solve
+    # server's eviction check uses.
+    res = float(jax.jit(engine.residual_for())(out))
     print(f"kernel={args.kernel} devices={args.devices} "
           f"t={args.t if args.t is not None else args.depth} "
           f"grid={args.ny}x{args.nx} iters={args.iters}")
-    print(f"wall={dt:.3f}s  GPt/s={gpts:.3f}  "
+    print(f"wall={dt:.3f}s  GPt/s={gpts:.3f}  residual={res:.3e}  "
           f"mean={result.mean():.6f}  max={result.max():.6f}")
 
     if args.check:

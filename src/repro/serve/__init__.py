@@ -1,1 +1,17 @@
-"""repro subpackage."""
+"""Serving layers: continuous batching for LM decode and stencil solves.
+
+* :mod:`repro.serve.engine` — slot-based batched prefill/decode for the
+  cached model families (:class:`~repro.serve.engine.ServeEngine`).
+* :mod:`repro.serve.solve` — the stencil analogue: admit many concurrent
+  solve requests, bucket compatible ones, advance each bucket through one
+  vmapped ``engine.run`` launch per block, and evict converged solves
+  mid-flight on their in-launch residual
+  (:class:`~repro.serve.solve.SolveServer`).
+"""
+from repro.serve.solve import (  # noqa: F401
+    BucketKey,
+    SolveProgress,
+    SolveRejected,
+    SolveRequest,
+    SolveServer,
+)

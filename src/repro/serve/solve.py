@@ -1,0 +1,440 @@
+"""Stencil-solve-as-a-service: bucketed continuous batching with
+residual-based eviction.
+
+Every caller used to pay one ``engine.run`` launch per request and run a
+*fixed* ``iters`` even after converging. :class:`SolveServer` is the
+request-level scheduling layer above the engine:
+
+* **admission** — each :class:`SolveRequest` is validated by building its
+  real :class:`~repro.engine.schedule.SweepSchedule` (policy resolution,
+  depth clamping, device budget) and running
+  :func:`repro.analysis.check_schedule`; rejections are structured
+  ``SCHED-*`` diagnostics, not ad-hoc ValueErrors.
+* **bucketing** — compatible requests (same ringed shape / spec / dtype /
+  resolved policy / block depth ``t`` / device) share a :class:`BucketKey`
+  derived from that schedule. A bucket never mixes dtypes or specs:
+  :func:`repro.analysis.check_bucket` gates every slot assignment.
+* **batched launch** — each bucket advances all its active slots ``t``
+  sweeps through ONE jitted :func:`repro.engine.run_batched` launch
+  (``vmap`` over the slot axis, bit-identical per lane to a solo
+  ``engine.run``), and the per-slot residual is computed inside the same
+  launch — no extra host round-trip per convergence check.
+* **eviction** — a slot whose residual reaches its request's ``tol`` (or
+  whose iteration budget is spent) is evicted mid-flight and its slot is
+  immediately refilled from the bucket's queue, ``serve/engine.py``
+  slot-style. Realized iteration counts are always a multiple of the
+  bucket cadence ``t``, so every result is bit-exact (fp32) against
+  ``engine.run(iters=request.iters_done)``.
+* **streaming** — a request may attach a callback that receives a
+  :class:`SolveProgress` (iteration count, residual, optionally the
+  iterate itself) after every block.
+* **warmup** — :meth:`SolveServer.warm` populates the
+  :mod:`repro.engine.tune` cache per (bucket, device) before traffic
+  arrives, so the first wave never pays a measurement pass.
+
+``benchmarks/bench_serve.py`` tracks the throughput/latency trajectory of
+this layer under mixed traffic in ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import check_bucket, check_schedule
+from repro.analysis.diagnostics import Report, error
+from repro.core.stencil import StencilSpec, jacobi_2d_5pt
+from repro.engine.device import DeviceModel, get_device
+from repro.engine.dispatch import residual_for, run_batched
+from repro.engine.plan import PlanError
+from repro.engine.schedule import build_schedule, effective_depth
+
+
+class SolveRejected(ValueError):
+    """A request the server cannot admit; the message is the structured
+    diagnostic report (stable ``SCHED-*`` codes)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """The static launch identity a batch must agree on.
+
+    Derived from the request's resolved schedule at admission: ``policy``
+    is the post-``auto``/``tuned`` registry name (or ``"reference"``) and
+    ``t`` the realized block cadence, so two requests land in the same
+    bucket exactly when one vmapped launch can serve both. Frozen and
+    hashable — it keys the server's bucket table and the jitted block
+    functions.
+    """
+
+    shape: tuple[int, int]
+    dtype: str
+    spec: StencilSpec
+    policy: str
+    t: int
+    device: "str | DeviceModel | None"
+    interpret: bool
+
+    def fields(self) -> dict:
+        """Field dict for :func:`repro.analysis.check_bucket`."""
+        return {"shape": self.shape, "dtype": self.dtype,
+                "spec": self.spec, "policy": self.policy, "t": self.t,
+                "device": self.device, "interpret": self.interpret}
+
+    def describe(self) -> str:
+        return (f"{self.shape[0]}x{self.shape[1]} {self.dtype} "
+                f"{self.policy} t={self.t} "
+                f"dev={getattr(self.device, 'name', self.device)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveProgress:
+    """One streamed observation: the state after a block of ``t`` sweeps."""
+
+    iters_done: int
+    residual: float
+    iterate: Optional[np.ndarray] = None  # only with ``stream_iterates``
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One solve: a ringed grid advanced until ``tol`` or ``max_iters``.
+
+    ``tol=None`` disables residual eviction (fixed-iteration semantics,
+    like a bare ``engine.run``). The realized iteration count is always a
+    multiple of the bucket cadence ``t`` and never exceeds ``max_iters``;
+    convergence is checked once per block, so ``iters_done`` is the first
+    multiple of ``t`` at which ``residual <= tol`` held (or
+    ``(max_iters // t) * t``). ``stream`` is called with a
+    :class:`SolveProgress` after every block; set ``stream_iterates`` to
+    also receive the iterate (a host copy — costs a transfer per block).
+    """
+
+    grid: "np.ndarray | jax.Array"
+    spec: StencilSpec = dataclasses.field(default_factory=jacobi_2d_5pt)
+    tol: float | None = None
+    max_iters: int = 200
+    policy: str = "auto"
+    t: int | None = None
+    stream: Callable[["SolveRequest", SolveProgress], None] | None = None
+    stream_iterates: bool = False
+
+    # Filled in by the server.
+    result: np.ndarray | None = None
+    iters_done: int = 0
+    residual: float | None = None
+    converged: bool = False
+    done: bool = False
+    key: BucketKey | None = None
+    target_blocks: int = 0
+    blocks_done: int = 0
+    submitted_s: float | None = None
+    finished_s: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.submitted_s is None or self.finished_s is None:
+            return None
+        return self.finished_s - self.submitted_s
+
+
+class _Bucket:
+    """One batch lane-set: slots, queue, and the jitted block launcher."""
+
+    def __init__(self, key: BucketKey, max_slots: int, block_fn):
+        self.key = key
+        self.max_slots = max_slots
+        self.block = block_fn              # us -> (us', residuals)
+        self.queue: collections.deque[SolveRequest] = collections.deque()
+        self.slots: list[SolveRequest | None] = []
+        self.us: jax.Array | None = None   # (S, H, W) slot tensor
+        self.launches = 0
+        self.evicted_early = 0
+        self.completed = 0
+        self.peak_active = 0
+
+    def admit(self, req: SolveRequest, fields: dict) -> None:
+        """Gate a request into this bucket (stable ``SCHED-BUCKET-MIX``
+        diagnostics on any static-field mismatch), then enqueue it."""
+        check_bucket(self.key.fields(), fields).raise_if_errors(
+            SolveRejected)
+        self.queue.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self.active > 0
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@functools.lru_cache(maxsize=64)
+def _block_for(key: BucketKey):
+    """One jitted launch: ``t`` sweeps for every slot + per-slot
+    residuals, computed on the advanced iterate inside the same launch
+    (the eviction check costs no extra host round-trip).
+
+    Memoized at module level on the frozen :class:`BucketKey`, so every
+    server instance serving the same bucket shares one jit cache — a
+    fresh ``SolveServer`` does not re-trace blocks an earlier one
+    already compiled.
+    """
+    res_fn = residual_for(key.spec)
+
+    def block(us):
+        vs = run_batched(us, key.spec, policy=key.policy,
+                         iters=key.t, t=key.t,
+                         interpret=key.interpret, device=key.device)
+        return vs, jax.vmap(res_fn)(vs)
+
+    return jax.jit(block)
+
+
+class SolveServer:
+    """Admit → bucket → vmap → evict: continuous batching for solves.
+
+    ``max_slots`` caps each bucket's batch width (slot tensors grow in
+    powers of two up to it, so the jit cache holds a handful of batch
+    shapes, not one per arrival count). ``device`` / ``interpret`` are
+    server-wide: one server plans and launches for one device model.
+    """
+
+    def __init__(self, *, max_slots: int = 8,
+                 device: "str | DeviceModel | None" = None,
+                 interpret: bool | None = None):
+        if max_slots < 1:
+            raise ValueError(f"max_slots={max_slots} must be >= 1")
+        self.max_slots = int(max_slots)
+        self._device = (get_device(device).name
+                        if isinstance(device, str) else device)
+        self._interpret = (interpret if interpret is not None
+                           else jax.default_backend() != "tpu")
+        self._buckets: dict[BucketKey, _Bucket] = {}
+        self._completed: list[SolveRequest] = []
+        self.warmed: dict[tuple, str] = {}
+
+    # ------------------------------------------------------- admission
+
+    def submit(self, req: SolveRequest) -> SolveRequest:
+        """Validate, bucket, and enqueue one request.
+
+        Raises :class:`SolveRejected` with structured diagnostics when the
+        request cannot be scheduled (``SCHED-REQUEST-INFEASIBLE`` wraps
+        planner/budget failures; ``check_schedule`` findings pass through
+        verbatim).
+        """
+        grid = jnp.asarray(req.grid)
+        if grid.ndim != 2:
+            self._reject(f"grids are 2-D ringed arrays; got shape "
+                         f"{tuple(grid.shape)}")
+        if req.max_iters < 1:
+            self._reject(f"max_iters={req.max_iters} must be >= 1 "
+                         f"(nothing to solve)")
+        shape = tuple(int(s) for s in grid.shape)
+        dtype = jnp.dtype(grid.dtype).name
+        try:
+            sched = build_schedule(
+                req.max_iters, spec=req.spec, shape=shape, dtype=dtype,
+                policy=req.policy, t=req.t, interpret=self._interpret,
+                device=self._device)
+            cadence = effective_depth(req.max_iters, req.t)
+            if req.policy != "reference" and sched.policy != "reference":
+                # The block launch runs `cadence` sweeps per call; its
+                # plan must validate at that depth too (for fused
+                # policies sched.t == cadence already).
+                build_schedule(cadence, spec=req.spec, shape=shape,
+                               dtype=dtype, policy=sched.policy, t=cadence,
+                               interpret=self._interpret,
+                               device=self._device)
+        except (PlanError, ValueError) as e:
+            self._reject(str(e), cause=e)
+        report = check_schedule(sched, shape=shape, dtype=dtype,
+                                spec=req.spec, device=self._device)
+        report.raise_if_errors(SolveRejected)
+
+        key = BucketKey(shape=shape, dtype=dtype, spec=req.spec,
+                        policy=sched.policy, t=cadence,
+                        device=self._device, interpret=self._interpret)
+        req.grid = grid.astype(jnp.dtype(dtype))
+        req.key = key
+        req.target_blocks = req.max_iters // cadence
+        req.blocks_done = 0
+        req.submitted_s = time.perf_counter()
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = _Bucket(
+                key, self.max_slots, _block_for(key))
+        bucket.admit(req, key.fields())
+        return req
+
+    def _reject(self, message: str, cause: Exception | None = None):
+        report = Report((error(
+            "SCHED-REQUEST-INFEASIBLE", "request", message,
+            hint="resize the grid, lower t, or serve on a device with "
+                 "more fast memory"),))
+        raise SolveRejected(report.describe()) from cause
+
+    # --------------------------------------------------------- warmup
+
+    def warm(self, shapes, spec: StencilSpec | None = None, *,
+             dtype=jnp.float32, iters: int = 1, t: int | None = None
+             ) -> dict[tuple, str]:
+        """Pre-measure the tune cache for the buckets traffic will hit.
+
+        Thin wrapper over :func:`repro.engine.tune.warm` with the
+        server's device/interpret, so ``policy="tuned"`` requests never
+        pay a measurement pass at admission time. Idempotent; returns
+        ``{shape: winner}`` and records it in :attr:`warmed`.
+        """
+        from repro.engine import tune
+        spec = spec if spec is not None else jacobi_2d_5pt()
+        won = tune.warm(shapes, dtype, spec, iters=iters, t=t,
+                        interpret=self._interpret, device=self._device)
+        self.warmed.update(won)
+        return won
+
+    # -------------------------------------------------------- stepping
+
+    def _fill_slots(self, bucket: _Bucket) -> None:
+        demand = bucket.active + len(bucket.queue)
+        want = min(bucket.max_slots, _next_pow2(max(demand, 1)))
+        if want > len(bucket.slots):
+            pad = want - len(bucket.slots)
+            dummy = jnp.zeros((pad,) + bucket.key.shape,
+                              jnp.dtype(bucket.key.dtype))
+            bucket.us = (dummy if bucket.us is None
+                         else jnp.concatenate([bucket.us, dummy]))
+            bucket.slots.extend([None] * pad)
+        elif want < len(bucket.slots):
+            # Compact the straggler tail: gather active lanes into a
+            # narrower slot tensor (an exact copy — bit-exactness holds)
+            # so evicted lanes stop paying sweeps. Widths stay powers of
+            # two, so this reuses the same jitted block shapes growth
+            # already compiled.
+            keep = [i for i, r in enumerate(bucket.slots) if r is not None]
+            kept = (bucket.us[jnp.asarray(keep, jnp.int32)] if keep
+                    else jnp.zeros((0,) + bucket.key.shape,
+                                   jnp.dtype(bucket.key.dtype)))
+            pad = want - len(keep)
+            if pad:
+                kept = jnp.concatenate([
+                    kept, jnp.zeros((pad,) + bucket.key.shape,
+                                    jnp.dtype(bucket.key.dtype))])
+            bucket.us = kept
+            bucket.slots = [bucket.slots[i] for i in keep] + [None] * pad
+        for i, slot in enumerate(bucket.slots):
+            if slot is None and bucket.queue:
+                req = bucket.queue.popleft()
+                bucket.us = bucket.us.at[i].set(req.grid)
+                bucket.slots[i] = req
+        bucket.peak_active = max(bucket.peak_active, bucket.active)
+
+    def _evict(self, bucket: _Bucket, i: int, converged: bool) -> None:
+        req = bucket.slots[i]
+        req.result = np.asarray(bucket.us[i])
+        req.converged = converged
+        req.done = True
+        req.finished_s = time.perf_counter()
+        bucket.slots[i] = None           # the slot is free immediately
+        bucket.completed += 1
+        if converged and req.blocks_done < req.target_blocks:
+            bucket.evicted_early += 1
+        self._completed.append(req)
+
+    def step(self) -> int:
+        """Advance every busy bucket by one block of its cadence ``t``.
+
+        Returns the number of launches performed (0 = fully drained).
+        Slots freed by eviction are refilled from the bucket queue
+        *before* the next block, so a long queue streams through a fixed
+        set of slots.
+        """
+        launches = 0
+        for bucket in self._buckets.values():
+            if not bucket.busy:
+                continue
+            self._fill_slots(bucket)
+            if bucket.active == 0:
+                continue
+            us, residuals = bucket.block(bucket.us)
+            res = np.asarray(residuals)   # forces the launch
+            bucket.us = us
+            bucket.launches += 1
+            launches += 1
+            for i, req in enumerate(bucket.slots):
+                if req is None:
+                    continue
+                req.blocks_done += 1
+                req.iters_done = req.blocks_done * bucket.key.t
+                req.residual = float(res[i])
+                if req.stream is not None:
+                    iterate = (np.asarray(us[i]) if req.stream_iterates
+                               else None)
+                    req.stream(req, SolveProgress(req.iters_done,
+                                                  req.residual, iterate))
+                converged = req.tol is not None and req.residual <= req.tol
+                if converged or req.blocks_done >= req.target_blocks:
+                    self._evict(bucket, i, converged)
+        return launches
+
+    @property
+    def busy(self) -> bool:
+        return any(b.busy for b in self._buckets.values())
+
+    def drain(self, max_launches: int = 1_000_000) -> list[SolveRequest]:
+        """Step until every admitted request has completed."""
+        while self.busy:
+            if max_launches <= 0:
+                raise RuntimeError("drain exceeded its launch budget")
+            max_launches -= self.step()
+        return list(self._completed)
+
+    def solve(self, requests) -> list[SolveRequest]:
+        """Convenience: submit a batch of requests and drain the server.
+
+        Returns the same request objects (mutated in place with results),
+        in the caller's order.
+        """
+        reqs = list(requests)
+        for r in reqs:
+            self.submit(r)
+        self.drain()
+        return reqs
+
+    # ------------------------------------------------------ inspection
+
+    @property
+    def buckets(self) -> tuple[BucketKey, ...]:
+        return tuple(self._buckets)
+
+    def stats(self) -> dict:
+        """Aggregate serving counters (per bucket + totals)."""
+        per = {
+            b.key.describe(): {
+                "launches": b.launches, "completed": b.completed,
+                "evicted_early": b.evicted_early,
+                "peak_active": b.peak_active, "slots": len(b.slots),
+            } for b in self._buckets.values()
+        }
+        return {
+            "buckets": len(self._buckets),
+            "launches": sum(b.launches for b in self._buckets.values()),
+            "completed": sum(b.completed for b in self._buckets.values()),
+            "evicted_early": sum(b.evicted_early
+                                 for b in self._buckets.values()),
+            "per_bucket": per,
+        }

@@ -147,3 +147,86 @@ def test_bench_dist_checked_in_json_is_fresh():
             assert rec[key] == want[key], (rec["name"], key)
         for key in ("modeled_serial_us", "modeled_overlapped_us"):
             assert rec[key] == pytest.approx(want[key]), (rec["name"], key)
+
+
+def test_bench_serve_dry_rows_and_json(tmp_path):
+    """The solve-serving bench must account every request's realized
+    sweeps from the oracle in dry mode (timed fields stay 0.0), write the
+    tracked BENCH_serve.json shape, and show eviction actually saving
+    sweeps — the perf trajectory the serving tentpole is for."""
+    import json
+
+    from benchmarks import bench_serve
+
+    data = bench_serve.collect()
+    rows, agg = data["rows"], data["aggregate"]
+    assert len(rows) == len(bench_serve.WORKLOAD)
+    for rec in rows:
+        assert rec["realized_sweeps"] % bench_serve.T == 0
+        assert 0 < rec["realized_sweeps"] <= rec["fixed_sweeps"]
+        assert rec["solo_latency_ms"] == 0.0  # dry: nothing timed
+        assert rec["served_latency_ms"] == 0.0
+        if rec["tol"] is None:
+            # Fixed-iteration semantics: the full (rounded) budget runs.
+            assert rec["realized_sweeps"] == \
+                (rec["max_iters"] // bench_serve.T) * bench_serve.T
+    # Residual eviction must measurably cut total sweeps vs fixed iters.
+    assert agg["realized_sweeps"] < agg["fixed_sweeps"]
+    assert agg["sweeps_saved_frac"] > 0.5
+    assert agg["speedup"] == 0.0  # dry
+
+    payload = bench_serve.write_json(str(tmp_path / "BENCH_serve.json"),
+                                     data)
+    with open(tmp_path / "BENCH_serve.json") as f:
+        on_disk = json.load(f)
+    assert on_disk == json.loads(json.dumps(payload))
+    assert on_disk["bench"] == "solve_serve"
+    assert on_disk["dry"] is True
+
+    csv = bench_serve.run(data)
+    assert len(csv) == len(rows) + 1
+    for line in csv:
+        parts = line.split(",")
+        assert len(parts) == 3
+        float(parts[1])
+    assert csv[-1].startswith("serve_aggregate,")
+
+
+def test_bench_serve_checked_in_json_is_fresh():
+    """The committed BENCH_serve.json must match the current kernels and
+    carry the acceptance numbers honestly: batched mixed traffic >= 2x
+    the one-at-a-time baseline, with eviction cutting realized sweeps.
+    The sweep accounting is recomputed from the oracle here (the kernels
+    are bit-exact against it in fp32), so a stencil/schedule change that
+    moves eviction points fails this test until the bench is re-run with
+    ``python -m benchmarks.bench_serve``."""
+    import json
+    import os
+
+    from benchmarks import bench_serve
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(path) as f:
+        committed = json.load(f)
+    assert committed["dry"] is False, \
+        "commit BENCH_serve.json from a live run, not a dry one"
+    assert committed["t"] == bench_serve.T
+    assert committed["max_slots"] == bench_serve.MAX_SLOTS
+    assert committed["dtype"] == bench_serve.DTYPE
+
+    current = {r["name"]: r for r in bench_serve.collect()["rows"]}
+    assert len(committed["rows"]) == len(current)
+    for rec in committed["rows"]:
+        want = current[rec["name"]]
+        for key in ("interior", "policy", "tol", "max_iters",
+                    "fixed_sweeps", "realized_sweeps"):
+            assert rec[key] == want[key], (rec["name"], key)
+        assert rec["served_latency_ms"] > 0.0, rec["name"]
+
+    agg = committed["aggregate"]
+    assert agg["speedup"] >= 2.0, agg["speedup"]
+    assert agg["realized_sweeps"] < agg["fixed_sweeps"]
+    assert agg["evicted_early"] > 0
+    assert agg["server_s"] < agg["one_at_a_time_s"]
+    assert agg["served_p50_ms"] < agg["solo_p50_ms"]
