@@ -32,6 +32,7 @@ import json
 import time
 
 from benchmarks.common import dry_run, row
+from repro.obs import metrics as _metrics
 
 DTYPE = "float32"
 T = 64             # block cadence: sweeps per launch / residual check
@@ -103,9 +104,19 @@ def _realized_sweeps(shape, tol, max_iters) -> int:
     return done
 
 
-def _percentile(xs, q) -> float:
-    import numpy as np
-    return float(np.percentile(np.asarray(xs, dtype=float), q))
+def _latency_summary(name: str, lat_s) -> dict:
+    """Percentiles via the obs metrics layer (one histogram per pass).
+
+    The best pass's per-request latencies are observed into a fresh
+    ``repro.obs.metrics`` histogram and its ``summary()`` supplies
+    p50/p95/p99 — the same estimator every served metric uses, instead
+    of ad-hoc percentile math local to this table.
+    """
+    reg = _metrics.MetricsRegistry()
+    hist = reg.histogram(name)
+    for x in lat_s:
+        hist.observe(float(x))
+    return hist.summary()
 
 
 def _measure_solo() -> tuple[float, list[float]]:
@@ -183,8 +194,9 @@ def collect() -> dict:
         "realized_sweeps": sum(r["realized_sweeps"] for r in rows),
         "one_at_a_time_s": 0.0, "server_s": 0.0, "speedup": 0.0,
         "solo_requests_per_s": 0.0, "served_requests_per_s": 0.0,
-        "solo_p50_ms": 0.0, "solo_p95_ms": 0.0,
-        "served_p50_ms": 0.0, "served_p95_ms": 0.0,
+        "solo_p50_ms": 0.0, "solo_p95_ms": 0.0, "solo_p99_ms": 0.0,
+        "served_p50_ms": 0.0, "served_p95_ms": 0.0, "served_p99_ms": 0.0,
+        "percentile_source": "obs.metrics",
         "launches": 0, "evicted_early": 0, "buckets": 0,
     }
     agg["sweeps_saved_frac"] = 1.0 - (agg["realized_sweeps"]
@@ -192,6 +204,9 @@ def collect() -> dict:
     if not dry_run():
         solo_s, solo_lat = _measure_solo()
         served_s, served_lat, reqs, stats = _measure_served()
+        solo_sum = _latency_summary("bench.serve.solo_latency_s", solo_lat)
+        served_sum = _latency_summary("bench.serve.served_latency_s",
+                                      served_lat)
         for rec, sl, vl, req in zip(rows, solo_lat, served_lat, reqs):
             rec["solo_latency_ms"] = sl * 1e3
             rec["served_latency_ms"] = vl * 1e3
@@ -202,10 +217,12 @@ def collect() -> dict:
             "speedup": solo_s / served_s,
             "solo_requests_per_s": len(WORKLOAD) / solo_s,
             "served_requests_per_s": len(WORKLOAD) / served_s,
-            "solo_p50_ms": _percentile(solo_lat, 50) * 1e3,
-            "solo_p95_ms": _percentile(solo_lat, 95) * 1e3,
-            "served_p50_ms": _percentile(served_lat, 50) * 1e3,
-            "served_p95_ms": _percentile(served_lat, 95) * 1e3,
+            "solo_p50_ms": solo_sum["p50"] * 1e3,
+            "solo_p95_ms": solo_sum["p95"] * 1e3,
+            "solo_p99_ms": solo_sum["p99"] * 1e3,
+            "served_p50_ms": served_sum["p50"] * 1e3,
+            "served_p95_ms": served_sum["p95"] * 1e3,
+            "served_p99_ms": served_sum["p99"] * 1e3,
             "launches": stats["launches"],
             "evicted_early": stats["evicted_early"],
             "buckets": stats["buckets"],

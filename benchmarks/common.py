@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.engine.device import DeviceModel, get_device
+from repro.obs import metrics as _metrics
 from repro.roofline import V5E  # noqa: F401  (re-export for the tables)
 
 _V5E = get_device("tpu_v5e")
@@ -51,10 +52,18 @@ def dry_run() -> bool:
     return val not in ("", "0", "false", "no", "off")
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5,
+            metric: str | None = None) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready.
+
+    ``metric`` names an ``repro.obs.metrics`` histogram; when set, every
+    timed sample (seconds) is observed into it, so tables that want tail
+    percentiles read them from ``metrics.snapshot()`` instead of keeping
+    their own sample lists. Dry mode observes nothing.
+    """
     if dry_run():
         return 0.0
+    hist = _metrics.histogram(metric) if metric else None
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -64,6 +73,8 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
+        if hist is not None:
+            hist.observe(ts[-1])
     return float(np.median(ts))
 
 

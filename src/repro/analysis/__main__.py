@@ -45,6 +45,20 @@ def main(argv=None) -> int:
     print(f"repro.analysis: {len(cells)} cells — {n['verified']} verified, "
           f"{n['infeasible']} infeasible (planner/budget refusals), "
           f"{n['error']} error(s)")
+    if args.all:
+        # Per-cell timing summary, sourced from the obs metrics registry
+        # (run_sweep observes every cell's wall time into a histogram).
+        from repro.obs import metrics
+        hist = metrics.snapshot()["histograms"].get("analysis.cell_seconds")
+        if hist and hist["count"]:
+            print(f"cell timing: n={hist['count']} "
+                  f"total={hist['sum']:.2f}s mean={hist['mean'] * 1e3:.1f}ms "
+                  f"p50={hist['p50'] * 1e3:.1f}ms "
+                  f"p95={hist['p95'] * 1e3:.1f}ms "
+                  f"p99={hist['p99'] * 1e3:.1f}ms "
+                  f"max={hist['max'] * 1e3:.1f}ms")
+            for cell in sorted(cells, key=lambda c: -c.seconds)[:5]:
+                print(f"  slowest {cell.seconds * 1e3:8.1f}ms  {cell.tag}")
     return 1 if n["error"] else 0
 
 

@@ -62,6 +62,12 @@ CODES: dict[str, str] = {
                                 "the serving device (shape/policy/budget)",
     "SCHED-BUCKET-MIX": "a request does not match the batching bucket it "
                         "was routed to (shape/dtype/spec/policy/depth)",
+    # Observability reconciliation (repro.obs.compare): measured span
+    # durations vs the modeled bills attached to them.
+    "OBS-DRIFT": "a traced component's measured duration deviates from "
+                 "its attached model beyond the reconcile tolerance",
+    "OBS-UNMODELED": "a trace (or component) carries no usable model "
+                     "attribution to reconcile against",
 }
 
 

@@ -24,8 +24,10 @@ backends' ``lower`` itself calls back into :mod:`repro.analysis.verify`).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from repro.analysis.diagnostics import Report
+from repro.obs import metrics as _metrics
 
 #: Default sweep axes. ``--all`` uses every registered device and both
 #: dtypes; the default lane keeps the two paper-relevant chips.
@@ -57,12 +59,16 @@ class Cell:
     outcome: str          # "verified" | "infeasible" | "error"
     detail: str
     report: Report | None = None
+    seconds: float = 0.0  # wall time spent verifying this cell
+
+    @property
+    def tag(self) -> str:
+        return (f"{self.policy}/{self.spec}/{self.dtype}/{self.device}"
+                f"/t{self.t}{'/masked' if self.masked else ''}"
+                f"{'/overlap' if self.overlap else ''}")
 
     def describe(self) -> str:
-        tag = (f"{self.policy}/{self.spec}/{self.dtype}/{self.device}"
-               f"/t{self.t}{'/masked' if self.masked else ''}"
-               f"{'/overlap' if self.overlap else ''}")
-        return f"{self.outcome:10s} {tag:60s} {self.detail}"
+        return f"{self.outcome:10s} {self.tag:60s} {self.detail}"
 
 
 def _verify_cell(policy: str, spec_name: str, spec, dtype: str,
@@ -146,8 +152,16 @@ def run_sweep(*, policies=None, specs=None, dtypes=None, devices=None,
                             if masked and policy != "temporal":
                                 continue  # only temporal streams a mask
                             for overlap in (False, True):
-                                cells.append(_verify_cell(
+                                t0 = time.perf_counter()
+                                cell = _verify_cell(
                                     policy, spec_name,
                                     spec_map[spec_name], dtype, device,
-                                    t, masked, overlap, shape))
+                                    t, masked, overlap, shape)
+                                dt = time.perf_counter() - t0
+                                cell = dataclasses.replace(cell, seconds=dt)
+                                _metrics.histogram(
+                                    "analysis.cell_seconds").observe(dt)
+                                _metrics.counter(
+                                    f"analysis.cells.{cell.outcome}").inc()
+                                cells.append(cell)
     return cells

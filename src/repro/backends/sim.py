@@ -50,6 +50,7 @@ from repro.backends.ir import (BackendError, CBOverflowError,
                                ReadBlock, TapCombine, TapReduce,
                                TensixProgram, Tilize, Untilize, WriteBlock,
                                np_dtype, tile_grid, tilize, untilize)
+from repro.obs.trace import get_tracer, span as _obs_span
 
 
 @dataclasses.dataclass
@@ -128,6 +129,7 @@ class _CBState:
         self.dtypes = {cb.name: cb.dtype for cb in prog.cbs}
         self.layouts = {cb.name: cb.layout for cb in prog.cbs}
         self.occ = {cb.name: 0 for cb in prog.cbs}
+        self.peak = {cb.name: 0 for cb in prog.cbs}
         self.data: dict[str, dict] = {}
         self.prog = prog
 
@@ -139,6 +141,7 @@ class _CBState:
                 f"{self.occ[name]} resident exceeds capacity "
                 f"{self.caps[name]} (program {self.prog.policy!r})")
         self.occ[name] += n
+        self.peak[name] = max(self.peak[name], self.occ[name])
         self.data.setdefault(name, []).append(entry)  # FIFO ring order
 
     def pop(self, name: str) -> dict:
@@ -194,12 +197,13 @@ def _xfer_seconds(bytes_: int, txns: int, hops: int, dev: DeviceModel,
 def _run_block(prog: TensixProgram, u: np.ndarray, out: np.ndarray,
                block: int, hops: int, counters: SimCounters,
                pipe_bw: float, mask: np.ndarray | None = None
-               ) -> tuple[float, float, float, int]:
+               ) -> tuple[float, float, float, int, dict]:
     """Execute one grid block through reader -> compute -> writer.
 
-    Returns the three stage times and the block's DRAM byte count;
-    numeric effects land in ``out``. ``mask`` is the second DRAM stream
-    masked-temporal programs read their pin cells from.
+    Returns the three stage times, the block's DRAM byte count, and the
+    per-CB peak tile occupancy this block reached; numeric effects land
+    in ``out``. ``mask`` is the second DRAM stream masked-temporal
+    programs read their pin cells from.
     """
     dev = prog.plan.device
     plan = prog.plan
@@ -311,7 +315,7 @@ def _run_block(prog: TensixProgram, u: np.ndarray, out: np.ndarray,
             counters.writer.hops += hops * txns if op.sync else hops
             blk_bytes += nbytes
             tw += _xfer_seconds(nbytes, txns, hops, dev, pipe_bw, op.sync)
-    return tr, tc, tw, blk_bytes
+    return tr, tc, tw, blk_bytes, dict(cbs.peak)
 
 
 def _push_result(cbs: _CBState, dst: str, acc: np.ndarray,
@@ -379,6 +383,7 @@ def run_program(u: np.ndarray, prog: TensixProgram, *,
     counters = SimCounters()
     core_times = {} if core_times is None else core_times
     out = np.array(u, copy=True)
+    tracer = get_tracer()
     for i in range(nblocks):
         core = i % ncores
         cy, cx = divmod(core % (gy * gx), gx)
@@ -386,8 +391,9 @@ def run_program(u: np.ndarray, prog: TensixProgram, *,
         # center (Grayskull's controllers sit mid-die; corner cores pay the
         # longest NoC path, which is what per-access sync exposes).
         hops = abs(cy - (gy - 1) // 2) + abs(cx - (gx - 1) // 2) + 1
-        tr, tc, tw, blk_bytes = _run_block(prog, u, out, i, hops, counters,
-                                           pipe_bw, mask=mask)
+        tr, tc, tw, blk_bytes, cb_peaks = _run_block(prog, u, out, i, hops,
+                                                     counters, pipe_bw,
+                                                     mask=mask)
         counters.reader.seconds += tr
         counters.compute.seconds += tc
         counters.writer.seconds += tw
@@ -400,6 +406,13 @@ def run_program(u: np.ndarray, prog: TensixProgram, *,
             blk = tr + tc + tw
         core_times[core] = core_times.get(core, 0.0) + blk
         counters.blocks += 1
+        if tracer is not None:
+            # Counter tracks, one sample per block: cumulative modeled
+            # busy time per core and this block's per-CB peak tiles.
+            tracer.counter("sim.core_busy_s",
+                           {f"core{c}": v
+                            for c, v in sorted(core_times.items())})
+            tracer.counter("sim.cb_occupancy", cb_peaks)
     counters.sweeps += prog.plan.t if prog.policy == "temporal" else 1
     return out, counters, core_times
 
@@ -449,63 +462,71 @@ def simulate(u, spec: StencilSpec | None = None, *, policy: str = "auto",
     spec = spec if spec is not None else jacobi_2d_5pt()
     u_np = np.asarray(u)
     shape, dtype = u_np.shape, u_np.dtype
-    mask_np = None if mask is None else np.asarray(mask).astype(dtype)
-    sched = build_schedule(iters, spec=spec, shape=shape, dtype=dtype,
-                           policy=policy, t=t, bm=bm, interpret=True,
-                           device=device, remainder_policy=remainder_policy)
-    # Feasibility gates (masked-remainder, remainder policy, mesh
-    # decomposition) live in the shared static checker; refuse with its
-    # diagnostics rather than model the wrong schedule.
-    from repro.analysis.feasibility import check_schedule
-    check_schedule(sched, shape=shape, dtype=dtype, spec=spec,
-                   device=device, mesh_shape=mesh_shape,
-                   masked=mask_np is not None
-                   ).raise_if_errors(BackendError)
+    with _obs_span("sim.simulate", iters=iters, shape=tuple(shape),
+                   requested_policy=policy) as sp:
+        mask_np = None if mask is None else np.asarray(mask).astype(dtype)
+        sched = build_schedule(iters, spec=spec, shape=shape, dtype=dtype,
+                               policy=policy, t=t, bm=bm, interpret=True,
+                               device=device,
+                               remainder_policy=remainder_policy)
+        # Feasibility gates (masked-remainder, remainder policy, mesh
+        # decomposition) live in the shared static checker; refuse with its
+        # diagnostics rather than model the wrong schedule.
+        from repro.analysis.feasibility import check_schedule
+        check_schedule(sched, shape=shape, dtype=dtype, spec=spec,
+                       device=device, mesh_shape=mesh_shape,
+                       masked=mask_np is not None
+                       ).raise_if_errors(BackendError)
 
-    programs = []
-    prog_reps: list[tuple[TensixProgram, int]] = []
-    if sched.fused:
-        if sched.fused_blocks:
+        programs = []
+        prog_reps: list[tuple[TensixProgram, int]] = []
+        if sched.fused:
+            if sched.fused_blocks:
+                prog = _lower(shape, dtype, spec, sched.policy, bm=bm,
+                              t=sched.t, device=device, tilized=tilized,
+                              masked=mask_np is not None)
+                prog = dataclasses.replace(prog, interleaved=interleaved)
+                prog_reps.append((prog, sched.fused_blocks))
+            if sched.remainder or not prog_reps:
+                # remainder == 0 with no program yet is iters == 0: lower
+                # the remainder program with zero reps so the grid passes
+                # through unchanged, like engine.run's zero-length scan.
+                prog = _lower(shape, dtype, spec, sched.remainder_policy,
+                              bm=bm, device=device, tilized=tilized)
+                prog = dataclasses.replace(prog, interleaved=interleaved)
+                prog_reps.append((prog, sched.remainder))
+        else:
             prog = _lower(shape, dtype, spec, sched.policy, bm=bm,
-                          t=sched.t, device=device, tilized=tilized,
-                          masked=mask_np is not None)
-            prog = dataclasses.replace(prog, interleaved=interleaved)
-            prog_reps.append((prog, sched.fused_blocks))
-        if sched.remainder or not prog_reps:
-            # remainder == 0 with no program yet is iters == 0: lower the
-            # remainder program with zero reps so the grid passes through
-            # unchanged, exactly like engine.run's zero-length scan.
-            prog = _lower(shape, dtype, spec, sched.remainder_policy, bm=bm,
                           device=device, tilized=tilized)
             prog = dataclasses.replace(prog, interleaved=interleaved)
-            prog_reps.append((prog, sched.remainder))
-    else:
-        prog = _lower(shape, dtype, spec, sched.policy, bm=bm, device=device,
-                      tilized=tilized)
-        prog = dataclasses.replace(prog, interleaved=interleaved)
-        prog_reps.append((prog, sched.iters))
+            prog_reps.append((prog, sched.iters))
 
-    total = SimCounters()
-    core_times: dict[int, float] = {}
-    for prog, reps in prog_reps:
-        programs.append(prog)
-        for _ in range(reps):
-            u_np, counters, core_times = run_program(u_np, prog,
-                                                     core_times=core_times,
-                                                     mask=mask_np)
-            total.merge(counters)
-    dev = programs[0].plan.device
-    ncores = min(programs[0].plan.nblocks, dev.cores)
-    model_time = _chip_time(total, core_times, dev)
-    bill = None
-    if mesh_shape is not None and int(np.prod(mesh_shape)) > 1:
-        bill = _mesh_exchange_bill(sched, shape, dtype, spec, dev,
-                                   mesh_shape, model_time)
-        model_time = bill.overlapped_s if overlap else bill.serial_s
-    return SimResult(grid=jnp.asarray(u_np), counters=total,
-                     model_time_s=model_time,
-                     device=dev, cores_used=ncores,
-                     programs=tuple(programs), exchange_model=bill)
+        total = SimCounters()
+        core_times: dict[int, float] = {}
+        for prog, reps in prog_reps:
+            programs.append(prog)
+            for _ in range(reps):
+                u_np, counters, core_times = run_program(
+                    u_np, prog, core_times=core_times, mask=mask_np)
+                total.merge(counters)
+        dev = programs[0].plan.device
+        ncores = min(programs[0].plan.nblocks, dev.cores)
+        model_time = _chip_time(total, core_times, dev)
+        bill = None
+        if mesh_shape is not None and int(np.prod(mesh_shape)) > 1:
+            bill = _mesh_exchange_bill(sched, shape, dtype, spec, dev,
+                                       mesh_shape, model_time)
+            model_time = bill.overlapped_s if overlap else bill.serial_s
+        # model_s is the modeled chip time: reconcile joins it against the
+        # span's measured host-sim wall time, whose drift IS the
+        # simulation-overhead factor.
+        sp.set(policy=sched.policy, device=dev.name, cores_used=ncores,
+               blocks=total.blocks, dram_bytes=total.dram_bytes,
+               model_s=model_time)
+        return SimResult(grid=jnp.asarray(u_np), counters=total,
+                         model_time_s=model_time,
+                         device=dev, cores_used=ncores,
+                         programs=tuple(programs), exchange_model=bill)
 
 
 def _mesh_exchange_bill(sched, shape, dtype, spec: StencilSpec,

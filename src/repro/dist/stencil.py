@@ -94,42 +94,28 @@ def masked_block(sweep: Callable) -> Callable:
     return block
 
 
-def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
-                  block: Callable, row_axis: str, col_axis: str,
-                  px: int, py: int, r: int, t: int,
-                  overlap: bool = False):
-    """Advance the local shard by ``t`` sweeps with one depth-``t*r``
-    exchange. Bands are local slices of the global Dirichlet bands;
-    ``tl``/``tr``/``bl``/``br`` are the replicated ``r x r`` ring corners.
-
-    With ``overlap``, the shard splits into an **interior** launch on the
-    raw (un-haloed) shard — no data dependence on the ppermutes, so XLA's
-    latency-hiding scheduler computes it while the exchange is in flight —
-    and four **rind** strip launches on the arrived extended block. After
-    ``t`` sweeps of radius ``r``, every cell at distance >= ``d = t*r``
-    from a strip edge has the same dependency cone (and the same f32 tap
-    accumulation order) as in the one-block launch, so the stitched
-    result is bit-identical to the serial path; cells nearer an edge are
-    stale in *both* formulations and are exactly the ones cropped/covered.
-    A shard too small for a nonempty interior (``hl <= 2d`` or
-    ``wl <= 2d``) silently runs the serial round — same numbers, nothing
-    left to hide the exchange behind.
-    """
-    hl, wl = u.shape
-    d = t * r
-    if d > min(hl, wl):
-        raise ValueError(
-            f"halo depth {d} (t={t} sweeps x radius {r}) exceeds local "
-            f"block {u.shape}; lower t or use more rows/cols per shard")
-    overlap = overlap and overlap_feasible(hl, wl, d)
-    if overlap:
-        # Interior launch, issued before the exchange: after t sweeps the
-        # cells >= d from the shard edge are exact (the near-edge cells
-        # would need halo data and are covered by the rind strips below).
-        inner = block(u, jnp.zeros(u.shape, bool), t)
-        inner_keep = inner[d:hl - d, d:wl - d]
+def _shard_index(row_axis: str, col_axis: str, px: int, py: int):
+    """This shard's (row, col) coordinate in the decomposition (0 on an
+    unsplit axis)."""
     ix = jax.lax.axis_index(row_axis) if px > 1 else 0
     iy = jax.lax.axis_index(col_axis) if py > 1 else 0
+    return ix, iy
+
+
+def _assemble_ext(u, top, bottom, left, right, tl, tr, bl, br, *,
+                  row_axis: str, col_axis: str, px: int, py: int,
+                  r: int, d: int):
+    """The exchange phase: build the depth-``d`` extended local block.
+
+    Two-phase ``ppermute`` (rows first, then columns of the row-extended
+    block so shard-corner halos ride along), Dirichlet bands substituted
+    on physical domain edges, and the four ``r x r`` physical ring
+    corners patched onto the corner shards. Pure function of the local
+    shard + bands, shared between the fused serial/overlap rounds in
+    :func:`_local_sweeps` and the per-phase traced executor.
+    """
+    hl, wl = u.shape
+    ix, iy = _shard_index(row_axis, col_axis, px, py)
 
     # Phase 1 — row halos; Dirichlet bands on physical top/bottom edges.
     uh, dh = exchange_rows(u, row_axis, px, d)
@@ -166,34 +152,101 @@ def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
         ((ix == px - 1) & (iy == py - 1), br, rows_bot, cols_rig),
     ):
         ext = jnp.where(cond, ext.at[rs, cs].set(corner.astype(u.dtype)), ext)
+    return ext
 
-    # The pin mask: physical Dirichlet bands stay fixed across all t
-    # sweeps; every other edge cell is exchanged halo that must evolve
-    # (its staleness grows r per sweep and is cropped below).
+
+def _pin_mask(hl: int, wl: int, d: int, ix, iy, px: int, py: int):
+    """The pin mask on the extended block: physical Dirichlet bands stay
+    fixed across all ``t`` sweeps; every other edge cell is exchanged halo
+    that must evolve (its staleness grows ``r`` per sweep and is cropped
+    by the caller)."""
     rr = jnp.arange(hl + 2 * d)[:, None]
     cc = jnp.arange(wl + 2 * d)[None, :]
-    fixed = (((ix == 0) & (rr < d)) | ((ix == px - 1) & (rr >= hl + d))
-             | ((iy == 0) & (cc < d)) | ((iy == py - 1) & (cc >= wl + d)))
+    return (((ix == 0) & (rr < d)) | ((ix == px - 1) & (rr >= hl + d))
+            | ((iy == 0) & (cc < d)) | ((iy == py - 1) & (cc >= wl + d)))
+
+
+def _interior_keep(u, block: Callable, t: int, d: int):
+    """The interior phase: advance the raw (un-haloed) shard ``t`` sweeps
+    and keep the cells >= ``d`` from the shard edge — exact without any
+    halo data (the near-edge cells are covered by the rind strips)."""
+    hl, wl = u.shape
+    inner = block(u, jnp.zeros(u.shape, bool), t)
+    return inner[d:hl - d, d:wl - d]
+
+
+def _rind_stitch(ext, fixed, inner_keep, *, block: Callable, t: int, d: int):
+    """The rind phase: four strip launches on the arrived extended block,
+    stitched around the interior result.
+
+    Each strip is wide enough (``3d``) that its kept cells sit >= ``d``
+    from every strip edge that is not ``ext``'s own (pinned or
+    cropped-anyway) boundary. Top/bottom strips span the full width and
+    keep the first/last ``d`` interior rows; left/right strips fill the
+    remaining ``hl - 2d`` rows and keep the first/last ``d`` interior
+    columns.
+    """
+    hl, wl = ext.shape[0] - 2 * d, ext.shape[1] - 2 * d
+    strips = (
+        (slice(0, 3 * d), slice(None)),                    # top
+        (slice(hl - d, hl + 2 * d), slice(None)),          # bottom
+        (slice(d, hl + d), slice(0, 3 * d)),               # left
+        (slice(d, hl + d), slice(wl - d, wl + 2 * d)),     # right
+    )
+    outs = [block(ext[rs, cs], fixed[rs, cs], t) for rs, cs in strips]
+    top_k = outs[0][d:2 * d, d:wl + d]
+    bot_k = outs[1][d:2 * d, d:wl + d]
+    lef_k = outs[2][d:hl - d, d:2 * d]
+    rig_k = outs[3][d:hl - d, d:2 * d]
+    mid = jnp.concatenate([lef_k, inner_keep, rig_k], axis=1)
+    return jnp.concatenate([top_k, mid, bot_k], axis=0)
+
+
+def _local_sweeps(u, top, bottom, left, right, tl, tr, bl, br, *,
+                  block: Callable, row_axis: str, col_axis: str,
+                  px: int, py: int, r: int, t: int,
+                  overlap: bool = False):
+    """Advance the local shard by ``t`` sweeps with one depth-``t*r``
+    exchange. Bands are local slices of the global Dirichlet bands;
+    ``tl``/``tr``/``bl``/``br`` are the replicated ``r x r`` ring corners.
+
+    With ``overlap``, the shard splits into an **interior** launch on the
+    raw (un-haloed) shard — no data dependence on the ppermutes, so XLA's
+    latency-hiding scheduler computes it while the exchange is in flight —
+    and four **rind** strip launches on the arrived extended block. After
+    ``t`` sweeps of radius ``r``, every cell at distance >= ``d = t*r``
+    from a strip edge has the same dependency cone (and the same f32 tap
+    accumulation order) as in the one-block launch, so the stitched
+    result is bit-identical to the serial path; cells nearer an edge are
+    stale in *both* formulations and are exactly the ones cropped/covered.
+    A shard too small for a nonempty interior (``hl <= 2d`` or
+    ``wl <= 2d``) silently runs the serial round — same numbers, nothing
+    left to hide the exchange behind.
+
+    The phases themselves (:func:`_assemble_ext`, :func:`_interior_keep`,
+    :func:`_pin_mask`, :func:`_rind_stitch`) are shared with the traced
+    per-phase executor (:func:`make_phase_steps`), so the one-launch and
+    span-per-phase formulations execute the same local ops.
+    """
+    hl, wl = u.shape
+    d = t * r
+    if d > min(hl, wl):
+        raise ValueError(
+            f"halo depth {d} (t={t} sweeps x radius {r}) exceeds local "
+            f"block {u.shape}; lower t or use more rows/cols per shard")
+    overlap = overlap and overlap_feasible(hl, wl, d)
     if overlap:
-        # Rind: four strip launches on the arrived block, each wide
-        # enough (3d) that its kept cells sit >= d from every strip edge
-        # that is not ext's own (pinned or cropped-anyway) boundary.
-        # Top/bottom strips span the full width and keep the first/last
-        # d interior rows; left/right strips fill the remaining hl - 2d
-        # rows and keep the first/last d interior columns.
-        strips = (
-            (slice(0, 3 * d), slice(None)),                    # top
-            (slice(hl - d, hl + 2 * d), slice(None)),          # bottom
-            (slice(d, hl + d), slice(0, 3 * d)),               # left
-            (slice(d, hl + d), slice(wl - d, wl + 2 * d)),     # right
-        )
-        outs = [block(ext[rs, cs], fixed[rs, cs], t) for rs, cs in strips]
-        top_k = outs[0][d:2 * d, d:wl + d]
-        bot_k = outs[1][d:2 * d, d:wl + d]
-        lef_k = outs[2][d:hl - d, d:2 * d]
-        rig_k = outs[3][d:hl - d, d:2 * d]
-        mid = jnp.concatenate([lef_k, inner_keep, rig_k], axis=1)
-        return jnp.concatenate([top_k, mid, bot_k], axis=0)
+        # Interior launch, issued before the exchange: after t sweeps the
+        # cells >= d from the shard edge are exact (the near-edge cells
+        # would need halo data and are covered by the rind strips below).
+        inner_keep = _interior_keep(u, block, t, d)
+    ext = _assemble_ext(u, top, bottom, left, right, tl, tr, bl, br,
+                        row_axis=row_axis, col_axis=col_axis, px=px, py=py,
+                        r=r, d=d)
+    ix, iy = _shard_index(row_axis, col_axis, px, py)
+    fixed = _pin_mask(hl, wl, d, ix, iy, px, py)
+    if overlap:
+        return _rind_stitch(ext, fixed, inner_keep, block=block, t=t, d=d)
     ext = block(ext, fixed, t)
     return ext[d:-d, d:-d]
 
@@ -240,6 +293,147 @@ def make_sharded_step(mesh, spec: StencilSpec, block: Callable, *,
     return step
 
 
+def make_phase_steps(mesh, spec: StencilSpec, block: Callable, *,
+                     row_axis: str | None, col_axis: str | None,
+                     t: int = 1) -> dict:
+    """Per-phase jitted shard_map callables for the traced executor.
+
+    Returns ``{"exchange", "compute", "interior", "rind"}``: the same
+    local ops :func:`_local_sweeps` runs in one launch, split so the
+    traced executor can ``block_until_ready`` between phases and put a
+    span around each. ``exchange(interior, *bands)`` returns the stacked
+    extended blocks; ``compute(ext)`` the serial full-block round;
+    ``interior(interior)`` the halo-independent keeps; ``rind(ext,
+    inner_keep)`` the stitched overlap round.
+    """
+    px = mesh.shape[row_axis] if row_axis else 1
+    py = mesh.shape[col_axis] if col_axis else 1
+    row_axis = row_axis or "_row_unused"
+    col_axis = col_axis or "_col_unused"
+    r = spec.radius
+    d = t * r
+    row = row_axis if px > 1 else None
+    col = col_axis if py > 1 else None
+    grid_spec = P(row, col)
+    band_specs = (grid_spec, P(None, col), P(None, col),
+                  P(row, None), P(row, None)) + (P(None, None),) * 4
+
+    def exchange_fn(u, top, bottom, left, right, tl, tr, bl, br):
+        return _assemble_ext(u, top, bottom, left, right, tl, tr, bl, br,
+                             row_axis=row_axis, col_axis=col_axis,
+                             px=px, py=py, r=r, d=d)
+
+    def compute_fn(ext):
+        hl, wl = ext.shape[0] - 2 * d, ext.shape[1] - 2 * d
+        ix, iy = _shard_index(row_axis, col_axis, px, py)
+        fixed = _pin_mask(hl, wl, d, ix, iy, px, py)
+        return block(ext, fixed, t)[d:-d, d:-d]
+
+    def interior_fn(u):
+        return _interior_keep(u, block, t, d)
+
+    def rind_fn(ext, inner_keep):
+        hl, wl = ext.shape[0] - 2 * d, ext.shape[1] - 2 * d
+        ix, iy = _shard_index(row_axis, col_axis, px, py)
+        fixed = _pin_mask(hl, wl, d, ix, iy, px, py)
+        return _rind_stitch(ext, fixed, inner_keep, block=block, t=t, d=d)
+
+    def sm(fn, in_specs):
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=grid_spec, check_vma=False))
+
+    return {"exchange": sm(exchange_fn, band_specs),
+            "compute": sm(compute_fn, (grid_spec,)),
+            "interior": sm(interior_fn, (grid_spec,)),
+            "rind": sm(rind_fn, (grid_spec, grid_spec))}
+
+
+def _obs_host_active(u) -> bool:
+    """Whether the per-phase traced executor should run: a
+    :mod:`repro.obs` tracer is installed and we are executing eagerly at
+    host level (not inside a jit trace) — the only situation where
+    phase spans measure real wall-clock rather than trace time."""
+    from repro.obs.trace import get_tracer
+    if get_tracer() is None or isinstance(u, jax.core.Tracer):
+        return False
+    try:
+        return bool(jax.core.trace_state_clean())
+    except AttributeError:  # older/newer jax without the helper
+        return True
+
+
+def _run_sharded_traced(u, interior, bc, spec: StencilSpec, mesh,
+                        block: Callable, *, schedule, row_axis, col_axis,
+                        remainder_block, bill, remainder_bill):
+    """Span-per-phase twin of the serial body of :func:`run_sharded`.
+
+    Each round runs as separate jitted phase launches with
+    ``block_until_ready`` between them, wrapped in ``dist.round`` >
+    ``exchange``/``interior``/``rind`` (or ``compute``) spans. Every
+    phase span carries the round's :class:`~repro.engine.schedule.
+    ExchangeBill` attrs plus its own ``model_s``, the join key
+    ``obs.reconcile`` prices drift from. The local ops are the exact
+    helpers the one-launch path uses, so the result is bit-identical —
+    what changes is that the phases are serialized to be measurable (the
+    overlap win itself is *not* realized here; the spans price what it
+    would hide). The first round of each depth also pays phase
+    compilation inside its spans.
+    """
+    from repro.obs.trace import span as _obs_span
+
+    r = spec.radius
+    px = mesh.shape[row_axis] if row_axis else 1
+    py = mesh.shape[col_axis] if col_axis else 1
+    bands = (bc["top"], bc["bottom"], bc["left"], bc["right"],
+             bc["tl"], bc["tr"], bc["bl"], bc["br"])
+
+    def attrs(b, model_s):
+        return dict(b.as_attrs(), model_s=model_s) if b is not None else {}
+
+    def run_round(interior, steps, t, b, idx):
+        d = t * r
+        hl, wl = interior.shape[0] // px, interior.shape[1] // py
+        ov = schedule.overlap and overlap_feasible(hl, wl, d)
+        with _obs_span("dist.round", round=idx, t=t, halo_depth=d,
+                       overlap=ov):
+            if ov:
+                with _obs_span("interior",
+                               **attrs(b, b.interior_s if b else None)):
+                    inner = jax.block_until_ready(
+                        steps["interior"](interior))
+                with _obs_span("exchange",
+                               **attrs(b, b.exchange_s if b else None)):
+                    ext = jax.block_until_ready(
+                        steps["exchange"](interior, *bands))
+                with _obs_span("rind",
+                               **attrs(b, b.rind_s if b else None)):
+                    interior = jax.block_until_ready(
+                        steps["rind"](ext, inner))
+            else:
+                with _obs_span("exchange",
+                               **attrs(b, b.exchange_s if b else None)):
+                    ext = jax.block_until_ready(
+                        steps["exchange"](interior, *bands))
+                with _obs_span("compute",
+                               **attrs(b, b.compute_s if b else None)):
+                    interior = jax.block_until_ready(steps["compute"](ext))
+        return interior
+
+    if schedule.fused_blocks:
+        steps = make_phase_steps(mesh, spec, block, row_axis=row_axis,
+                                 col_axis=col_axis, t=schedule.t)
+        for i in range(schedule.fused_blocks):
+            interior = run_round(interior, steps, schedule.t, bill, i)
+    if schedule.remainder:
+        steps_rem = make_phase_steps(
+            mesh, spec, remainder_block if remainder_block is not None
+            else block, row_axis=row_axis, col_axis=col_axis,
+            t=schedule.remainder)
+        interior = run_round(interior, steps_rem, schedule.remainder,
+                             remainder_bill, schedule.fused_blocks)
+    return u.at[r:-r, r:-r].set(interior)
+
+
 def resolve_axes(mesh, row_axis: str | None, col_axis: str | None):
     """Default decomposition axes: the mesh's first (rows) and second
     (columns, if any) axis names."""
@@ -272,7 +466,8 @@ def extended_shard_shape(shape, mesh, spec: StencilSpec, *, t: int = 1,
 def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
                 schedule, row_axis: str | None = None,
                 col_axis: str | None = None,
-                remainder_block: Callable | None = None) -> jax.Array:
+                remainder_block: Callable | None = None,
+                bill=None, remainder_bill=None) -> jax.Array:
     """Execute a :class:`~repro.engine.schedule.SweepSchedule` over ``mesh``.
 
     ``schedule.fused_blocks`` exchanges of depth ``schedule.halo_depth``
@@ -283,6 +478,13 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
     The iters/t/remainder arithmetic lives in the schedule — this function
     only spends exchanges; ``schedule.overlap`` selects the interior/rind
     split that hides each exchange behind the halo-independent compute.
+
+    With a :mod:`repro.obs` tracer installed (and an eager host-level
+    call), rounds run through the span-per-phase executor instead —
+    bit-identical result, one ``exchange``/``interior``/``rind`` (or
+    ``compute``) span per phase. ``bill``/``remainder_bill`` are the
+    per-round :class:`~repro.engine.schedule.ExchangeBill`\\ s those spans
+    attach for ``obs.reconcile`` (None = spans carry no model attrs).
     """
     row_axis, col_axis = resolve_axes(mesh, row_axis, col_axis)
     r = spec.radius
@@ -293,6 +495,13 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
 
     interior, bc = split_ringed_bands(u, r)
     bc = dict(bc, tl=u[:r, :r], tr=u[:r, -r:], bl=u[-r:, :r], br=u[-r:, -r:])
+
+    if _obs_host_active(u):
+        return _run_sharded_traced(
+            u, interior, bc, spec, mesh, block, schedule=schedule,
+            row_axis=row_axis, col_axis=col_axis,
+            remainder_block=remainder_block, bill=bill,
+            remainder_bill=remainder_bill)
 
     if schedule.fused_blocks:
         step = make_sharded_step(mesh, spec, block, row_axis=row_axis,

@@ -22,6 +22,7 @@ from repro.engine.device import DeviceModel, get_device
 from repro.engine.plan import DEFAULT_T, PlanError, plan_for
 from repro.engine.schedule import DEFAULT_REMAINDER_POLICY  # noqa: F401
 from repro.engine.schedule import build_schedule
+from repro.obs.trace import span as _obs_span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,20 +257,28 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
     if interpret is None:
         interpret = not _on_tpu()
     device = _resolve_device_name(device)
-    sched = build_schedule(iters, spec=spec, shape=u.shape, dtype=u.dtype,
-                           policy=policy, t=t, bm=bm, interpret=interpret,
-                           device=device, remainder_policy=remainder_policy)
-    p = get_policy(sched.policy)
-    if p.fused:
-        u = _scan_steps(u, functools.partial(
-            p.fn, spec=spec, bm=bm, t=sched.t, interpret=interpret,
-            device=device), sched.fused_blocks)
-        if sched.remainder:
-            rp = get_policy(sched.remainder_policy)
+    # Span note: under a jit trace this measures trace time (schedule and
+    # plan resolution), not kernel wall-clock — still host work worth
+    # seeing; eager callers get real durations.
+    with _obs_span("engine.run", iters=iters, shape=tuple(u.shape),
+                   requested_policy=policy) as sp:
+        sched = build_schedule(iters, spec=spec, shape=u.shape,
+                               dtype=u.dtype, policy=policy, t=t, bm=bm,
+                               interpret=interpret, device=device,
+                               remainder_policy=remainder_policy)
+        sp.set(policy=sched.policy, t=sched.t,
+               fused_blocks=sched.fused_blocks, remainder=sched.remainder)
+        p = get_policy(sched.policy)
+        if p.fused:
             u = _scan_steps(u, functools.partial(
-                rp.fn, spec=spec, bm=bm, interpret=interpret,
-                device=device), sched.remainder)
-        return u
-    return _scan_steps(u, functools.partial(
-        p.fn, spec=spec, bm=bm, interpret=interpret, device=device),
-        sched.iters)
+                p.fn, spec=spec, bm=bm, t=sched.t, interpret=interpret,
+                device=device), sched.fused_blocks)
+            if sched.remainder:
+                rp = get_policy(sched.remainder_policy)
+                u = _scan_steps(u, functools.partial(
+                    rp.fn, spec=spec, bm=bm, interpret=interpret,
+                    device=device), sched.remainder)
+            return u
+        return _scan_steps(u, functools.partial(
+            p.fn, spec=spec, bm=bm, interpret=interpret, device=device),
+            sched.iters)

@@ -31,6 +31,8 @@ degenerate.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.core.stencil import StencilSpec, apply_stencil, jacobi_2d_5pt
@@ -39,7 +41,9 @@ from repro.engine.dispatch import (_on_tpu, _resolve_device_name, get_policy,
                                    resolve_auto)
 from repro.engine.plan import plan_for
 from repro.engine.schedule import (DEFAULT_REMAINDER_POLICY, SweepSchedule,
-                                   build_schedule, effective_depth)
+                                   build_schedule, effective_depth,
+                                   price_exchange)
+from repro.obs.trace import get_tracer
 
 
 def _mesh_shape(mesh, row_axis: str | None, col_axis: str | None) -> tuple:
@@ -194,6 +198,24 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
             dtype=u.dtype, iters=sched.remainder, t=sched.remainder, bm=bm,
             interpret=interpret, device=device, mesh_shape=mesh_shape,
             overlap=sched.overlap)
+    bill = remainder_bill = None
+    if get_tracer() is not None:
+        # Per-round bills for the traced executor's phase spans: one
+        # fused round, and the (shallower) remainder round, priced by
+        # the same price_exchange the overlap decision came from.
+        if sched.fused_blocks:
+            bill = price_exchange(
+                dataclasses.replace(sched, iters=sched.t, fused_blocks=1,
+                                    remainder=0),
+                shard_shape=shard_shape, dtype=u.dtype, spec=spec,
+                device=device, mesh_shape=mesh_shape)
+        if sched.remainder:
+            remainder_bill = price_exchange(
+                dataclasses.replace(sched, iters=sched.remainder,
+                                    fused_blocks=0),
+                shard_shape=shard_shape, dtype=u.dtype, spec=spec,
+                device=device, mesh_shape=mesh_shape)
     return dstencil.run_sharded(u, spec, mesh, block, schedule=sched,
                                 row_axis=row_axis, col_axis=col_axis,
-                                remainder_block=remainder_block)
+                                remainder_block=remainder_block,
+                                bill=bill, remainder_bill=remainder_bill)

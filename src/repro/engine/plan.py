@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.stencil import StencilSpec
 from repro.engine.device import DeviceModel, get_device
+from repro.obs import metrics as _metrics
 
 # Knob defaults shared by every policy.
 DEFAULT_BM = 256   # interior rows per block
@@ -143,6 +144,9 @@ def _window_and_vmem(policy: str, shape, dtype_bytes: int, spec: StencilSpec,
 def _plan_cached(shape: tuple[int, int], dtype: str, spec: StencilSpec,
                  policy: str, bm_req: int, t: int,
                  device: DeviceModel, masked: bool) -> ExecutionPlan:
+    # Executed only on a cache miss (lru_cache body), so this counter plus
+    # the request counter in plan_for gives the hit/miss split.
+    _metrics.counter("engine.plan.miss").inc()
     h, w = shape
     r = spec.radius
     if spec.ndim != 2:
@@ -186,9 +190,13 @@ def plan_for(shape, dtype, spec: StencilSpec, policy: str, *,
     distributed shard form).
     """
     t_eff = (t if t is not None else DEFAULT_T) if policy == "temporal" else 1
-    return _plan_cached(tuple(int(s) for s in shape), jnp.dtype(dtype).name,
+    misses0 = _metrics.counter("engine.plan.miss").value
+    plan = _plan_cached(tuple(int(s) for s in shape), jnp.dtype(dtype).name,
                         spec, policy, int(bm if bm is not None else DEFAULT_BM),
                         int(t_eff), get_device(device), bool(masked))
+    if _metrics.counter("engine.plan.miss").value == misses0:
+        _metrics.counter("engine.plan.hit").inc()
+    return plan
 
 
 def plan_cache_info():

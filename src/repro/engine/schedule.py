@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.core.stencil import StencilSpec
 from repro.engine.device import DeviceModel, get_device
 from repro.engine.plan import DEFAULT_T, PlanError
+from repro.obs.trace import span as _obs_span
 
 #: Non-fused policy used for the leftover sweeps when ``iters`` is not a
 #: multiple of the temporal depth.
@@ -167,6 +168,20 @@ class ExchangeBill:
                 f"{self.overlapped_s * 1e6:.1f}us "
                 f"({'overlap wins' if self.wins else 'serial wins'})")
 
+    def as_attrs(self) -> dict:
+        """The bill as flat span attrs (``model_``-prefixed seconds), the
+        form the traced distributed executor attaches to each round's
+        ``exchange``/``interior``/``rind`` spans so ``obs.reconcile`` can
+        join measured durations against this pricing."""
+        return {"model_exchange_s": self.exchange_s,
+                "model_compute_s": self.compute_s,
+                "model_interior_s": self.interior_s,
+                "model_rind_s": self.rind_s,
+                "model_serial_s": self.serial_s,
+                "model_overlapped_s": self.overlapped_s,
+                "halo_bytes": self.halo_bytes,
+                "feasible": self.feasible}
+
 
 def _price_rounds(rounds, *, d_max: int, radius: int, taps: int,
                   shard_shape, dtype, device, mesh_shape,
@@ -268,6 +283,33 @@ def build_schedule(iters: int, *, spec: StencilSpec, shape, dtype,
                    remainder_policy: str = DEFAULT_REMAINDER_POLICY,
                    exchange_cadence: bool = False,
                    overlap: bool | None = None) -> SweepSchedule:
+    """Resolve ``(iters, t, policy)`` into a :class:`SweepSchedule`.
+
+    See :func:`_build_schedule` for the resolution rules; this wrapper
+    only adds the observability span (requested vs resolved schedule),
+    which is a no-op unless a :mod:`repro.obs` tracer is installed.
+    """
+    with _obs_span("engine.build_schedule", iters=iters,
+                   requested_policy=policy, requested_t=t) as sp:
+        sched = _build_schedule(
+            iters, spec=spec, shape=shape, dtype=dtype, policy=policy, t=t,
+            bm=bm, interpret=interpret, device=device, mesh_shape=mesh_shape,
+            remainder_policy=remainder_policy,
+            exchange_cadence=exchange_cadence, overlap=overlap)
+        sp.set(policy=sched.policy, t=sched.t,
+               fused_blocks=sched.fused_blocks, remainder=sched.remainder,
+               overlap=sched.overlap)
+        return sched
+
+
+def _build_schedule(iters: int, *, spec: StencilSpec, shape, dtype,
+                    policy: str = "auto", t: int | None = None,
+                    bm: int | None = None, interpret: bool = False,
+                    device: "str | DeviceModel | None" = None,
+                    mesh_shape: tuple | None = None,
+                    remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                    exchange_cadence: bool = False,
+                    overlap: bool | None = None) -> SweepSchedule:
     """Resolve ``(iters, t, policy)`` into a :class:`SweepSchedule`.
 
     ``policy`` may be a registry name, ``"reference"`` (the pure-jnp

@@ -37,6 +37,8 @@ from repro.engine.device import DeviceModel, get_device
 from repro.engine.dispatch import get_policy, registry
 from repro.engine.plan import DEFAULT_T, PlanError, plan_for
 from repro.engine.schedule import effective_depth
+from repro.obs import metrics as _metrics
+from repro.obs.trace import span as _obs_span
 
 #: Default on-disk location; override per call or via $REPRO_TUNE_CACHE.
 DEFAULT_CACHE_PATH = os.path.join(
@@ -176,8 +178,11 @@ def measure(shape, dtype, spec: StencilSpec, *, t: int | None = None,
             continue
         # the model object rides through whole so unregistered DeviceModel
         # instances work identically to registry names
-        timings[p.name] = _time_policy(u, spec, p.name, bm=bm, t=kw_t,
-                                       interpret=interpret, device=dev)
+        with _obs_span("tune.measure", policy=p.name, device=dev.name,
+                       shape=tuple(int(s) for s in shape)) as sp:
+            timings[p.name] = _time_policy(u, spec, p.name, bm=bm, t=kw_t,
+                                           interpret=interpret, device=dev)
+            sp.set(us_per_sweep=round(timings[p.name] * 1e6, 3))
     if not timings:
         raise PlanError(
             f"no policy plans for grid {tuple(shape)} ({jnp.dtype(dtype).name},"
@@ -220,10 +225,13 @@ def best_policy(shape, dtype, spec: StencilSpec, *, iters: int = 1,
     cache = _cache_for(path)
     rec = cache.get(key)
     if rec is None:
+        _metrics.counter("engine.tune.miss").inc()
         rec = measure(shape, dtype, spec, t=t_eff, bm=bm,
                       interpret=interpret, device=dev, masked=masked)
         cache[key] = rec
         _save(path)
+    else:
+        _metrics.counter("engine.tune.hit").inc()
     return rec["policy"]
 
 

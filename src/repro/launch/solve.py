@@ -76,11 +76,53 @@ def main():
                     help="statically verify the chosen schedule (and, when "
                          "the policy lowers, the Tensix program) before "
                          "execution and print the diagnostic report")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a repro.obs trace of the run and write it "
+                         "as Chrome-trace JSON (open in Perfetto / "
+                         "chrome://tracing, or inspect with "
+                         "'python -m repro.obs summarize PATH'). With "
+                         "--devices N the distributed executor runs its "
+                         "span-per-phase form: one exchange/interior/rind "
+                         "span per halo round, each carrying the round's "
+                         "modeled ExchangeBill")
     args = ap.parse_args()
 
+    from repro.obs.compare import reconcile
+    from repro.obs.trace import Tracer, use_tracer
+
+    if args.trace or args.serve:
+        # --serve always installs a tracer so the per-block progress sink
+        # has serve.block spans to print; the file is written on --trace.
+        tracer = Tracer(sink=_serve_progress if args.serve else None)
+        with use_tracer(tracer):
+            _dispatch(args)
+        if args.trace:
+            tracer.write_trace(args.trace)
+            print(f"trace: {len(tracer.events)} spans, "
+                  f"{len(tracer.counters)} counter samples -> {args.trace}")
+            print(tracer.describe())
+            print(reconcile(tracer).describe())
+    else:
+        _dispatch(args)
+
+
+def _serve_progress(ev) -> None:
+    """Tracer sink: one compact line per completed ``serve.block`` span."""
+    if getattr(ev, "name", None) != "serve.block":
+        return
+    a = ev.attrs
+    mr = a.get("max_residual")
+    print(f"[serve] block={a.get('launch', '?')} active={a.get('active')} "
+          f"queue={a.get('queue')} "
+          f"max_residual={'?' if mr is None else format(mr, '.3e')} "
+          f"wall={ev.dur_us / 1e3:.1f}ms")
+
+
+def _dispatch(args):
     from repro import engine
     from repro.core.stencil import make_laplace_problem
     from repro.kernels.ops import VERSION_TO_POLICY
+    from repro.obs.trace import get_tracer
 
     device = engine.get_device(args.device_model).name \
         if args.device_model else None
@@ -236,14 +278,24 @@ def main():
                                      device=device,
                                      mesh_shape=(args.devices,))
         print(f"exchange bill: {bill.describe()}")
-        run = jax.jit(lambda u: engine.run_distributed(
-            u, mesh=mesh, policy=policy, iters=args.iters, t=t_fuse,
-            row_axis="x", device=device, overlap=overlap))
-        run(u0).block_until_ready()  # compile
-        t0 = time.perf_counter()
-        out = run(u0)
-        out.block_until_ready()
-        dt = time.perf_counter() - t0
+        if get_tracer() is not None:
+            # Traced: run eagerly so the executor's span-per-phase form
+            # engages (an outer jit would fold the spans into trace time
+            # and hide the per-round exchange/interior/rind splits).
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(engine.run_distributed(
+                u0, mesh=mesh, policy=policy, iters=args.iters, t=t_fuse,
+                row_axis="x", device=device, overlap=overlap))
+            dt = time.perf_counter() - t0
+        else:
+            run = jax.jit(lambda u: engine.run_distributed(
+                u, mesh=mesh, policy=policy, iters=args.iters, t=t_fuse,
+                row_axis="x", device=device, overlap=overlap))
+            run(u0).block_until_ready()  # compile
+            t0 = time.perf_counter()
+            out = run(u0)
+            out.block_until_ready()
+            dt = time.perf_counter() - t0
         result = np.asarray(out)[1:-1, 1:-1]
     else:
         policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
@@ -256,6 +308,17 @@ def main():
             t_fuse = args.t if args.t is not None else args.temporal
             if args.verify:
                 _verify(policy, t_fuse)
+            if get_tracer() is not None:
+                # Traced: eager call so engine.run's span measures real
+                # wall-clock (the policy kernels are jitted inside).
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(engine.run(
+                    u0, policy=policy, iters=args.iters, t=t_fuse,
+                    device=device))
+                dt = time.perf_counter() - t0
+                result = np.asarray(out)[1:-1, 1:-1]
+                _report(args, out, result, dt)
+                return
             run = jax.jit(lambda u: engine.run(
                 u, policy=policy, iters=args.iters, t=t_fuse,
                 device=device))
@@ -266,6 +329,12 @@ def main():
         dt = time.perf_counter() - t0
         result = np.asarray(out)[1:-1, 1:-1]
 
+    _report(args, out, result, dt)
+
+
+def _report(args, out, result, dt):
+    """The shared kernel/wall/GPt/s/residual report + optional --check."""
+    from repro import engine
     gpts = args.ny * args.nx * args.iters / dt / 1e9
     # The converged residual, through the same engine helper the solve
     # server's eviction check uses.
@@ -277,8 +346,11 @@ def main():
           f"mean={result.mean():.6f}  max={result.max():.6f}")
 
     if args.check:
+        from repro.core.stencil import make_laplace_problem
         from repro.kernels import ref
-        want = u0
+        dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+        want = make_laplace_problem(args.ny, args.nx, dtype=dtype,
+                                    left=1.0, right=0.0)
         for _ in range(args.iters):
             want = ref.jacobi_step(want)
         err = np.abs(result - np.asarray(want)[1:-1, 1:-1]).max()

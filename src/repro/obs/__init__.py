@@ -1,0 +1,38 @@
+"""repro.obs — spans, metrics, and model-vs-measured reconciliation.
+
+Zero-dependency, disabled-by-default observability for the whole stack:
+
+* :mod:`repro.obs.trace` — contextvar-scoped :class:`Tracer` with nested
+  ``span(name, **attrs)`` context managers; exports Chrome-trace JSON
+  and a structured summary tree. With no tracer installed, ``obs.span``
+  returns a shared no-op — instrumentation costs nothing.
+* :mod:`repro.obs.metrics` — process-local counters/gauges/histograms
+  (p50/p95/p99) with a JSON snapshot.
+* :mod:`repro.obs.compare` — ``reconcile(trace)`` joins measured span
+  durations against the modeled bills attached to them and reports
+  per-component drift as structured ``OBS-*`` diagnostics.
+
+Instrumented surfaces: ``engine.run`` / ``build_schedule`` / ``plan_for``
+/ ``tune`` (spans + cache hit/miss counters), the distributed exchange
+rounds (``exchange``/``interior``/``rind`` spans carrying each round's
+:class:`~repro.engine.schedule.ExchangeBill`), ``serve.SolveServer``
+(per-block spans, slot/queue/residual gauges, admission counters), and
+``backends.sim`` (per-core busy + per-CB occupancy counter tracks).
+Drive it with ``launch/solve.py --trace out.json`` and inspect with
+``python -m repro.obs summarize out.json``.
+"""
+from repro.obs import metrics  # noqa: F401
+from repro.obs.compare import (ComponentDrift, DriftReport,  # noqa: F401
+                               reconcile)
+from repro.obs.trace import (NULL_SPAN, CounterEvent, Span,  # noqa: F401
+                             SpanEvent, Tracer, counter, counter_records,
+                             get_tracer, load_trace, set_tracer, span,
+                             span_records, summarize_spans, use_tracer,
+                             write_trace)
+
+__all__ = [
+    "ComponentDrift", "CounterEvent", "DriftReport", "NULL_SPAN", "Span",
+    "SpanEvent", "Tracer", "counter", "counter_records", "get_tracer",
+    "load_trace", "metrics", "reconcile", "set_tracer", "span",
+    "span_records", "summarize_spans", "use_tracer", "write_trace",
+]

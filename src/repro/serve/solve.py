@@ -38,6 +38,7 @@ this layer under mixed traffic in ``BENCH_serve.json``.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import time
@@ -54,6 +55,8 @@ from repro.engine.device import DeviceModel, get_device
 from repro.engine.dispatch import residual_for, run_batched
 from repro.engine.plan import PlanError
 from repro.engine.schedule import build_schedule, effective_depth
+from repro.obs import metrics as _metrics
+from repro.obs.trace import get_tracer, span as _obs_span, use_tracer
 
 
 class SolveRejected(ValueError):
@@ -162,8 +165,10 @@ class _Bucket:
     def admit(self, req: SolveRequest, fields: dict) -> None:
         """Gate a request into this bucket (stable ``SCHED-BUCKET-MIX``
         diagnostics on any static-field mismatch), then enqueue it."""
-        check_bucket(self.key.fields(), fields).raise_if_errors(
-            SolveRejected)
+        report = check_bucket(self.key.fields(), fields)
+        for d in report.errors:
+            _metrics.counter(f"serve.rejected.{d.code}").inc()
+        report.raise_if_errors(SolveRejected)
         self.queue.append(req)
 
     @property
@@ -215,7 +220,7 @@ class SolveServer:
 
     def __init__(self, *, max_slots: int = 8,
                  device: "str | DeviceModel | None" = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, tracer=None):
         if max_slots < 1:
             raise ValueError(f"max_slots={max_slots} must be >= 1")
         self.max_slots = int(max_slots)
@@ -223,9 +228,19 @@ class SolveServer:
                         if isinstance(device, str) else device)
         self._interpret = (interpret if interpret is not None
                            else jax.default_backend() != "tpu")
+        #: Optional :class:`repro.obs.Tracer` this server installs around
+        #: its own admission/stepping work — spans land on it even when
+        #: the caller never set one on the context. None defers to
+        #: whatever tracer (if any) is already installed.
+        self.tracer = tracer
         self._buckets: dict[BucketKey, _Bucket] = {}
         self._completed: list[SolveRequest] = []
         self.warmed: dict[tuple, str] = {}
+
+    def _obs(self):
+        """The tracer scope server work runs under (no-op without one)."""
+        return (use_tracer(self.tracer) if self.tracer is not None
+                else contextlib.nullcontext())
 
     # ------------------------------------------------------- admission
 
@@ -235,8 +250,16 @@ class SolveServer:
         Raises :class:`SolveRejected` with structured diagnostics when the
         request cannot be scheduled (``SCHED-REQUEST-INFEASIBLE`` wraps
         planner/budget failures; ``check_schedule`` findings pass through
-        verbatim).
+        verbatim). Admissions bump ``serve.admitted``; every rejection
+        bumps ``serve.rejected.<CODE>`` keyed by the diagnostic code.
         """
+        with self._obs(), _obs_span("serve.submit", policy=req.policy,
+                                    max_iters=req.max_iters) as sp:
+            req = self._submit(req)
+            sp.set(bucket=req.key.describe(), t=req.key.t)
+            return req
+
+    def _submit(self, req: SolveRequest) -> SolveRequest:
         grid = jnp.asarray(req.grid)
         if grid.ndim != 2:
             self._reject(f"grids are 2-D ringed arrays; got shape "
@@ -264,6 +287,8 @@ class SolveServer:
             self._reject(str(e), cause=e)
         report = check_schedule(sched, shape=shape, dtype=dtype,
                                 spec=req.spec, device=self._device)
+        for d in report.errors:
+            _metrics.counter(f"serve.rejected.{d.code}").inc()
         report.raise_if_errors(SolveRejected)
 
         key = BucketKey(shape=shape, dtype=dtype, spec=req.spec,
@@ -279,9 +304,11 @@ class SolveServer:
             bucket = self._buckets[key] = _Bucket(
                 key, self.max_slots, _block_for(key))
         bucket.admit(req, key.fields())
+        _metrics.counter("serve.admitted").inc()
         return req
 
     def _reject(self, message: str, cause: Exception | None = None):
+        _metrics.counter("serve.rejected.SCHED-REQUEST-INFEASIBLE").inc()
         report = Report((error(
             "SCHED-REQUEST-INFEASIBLE", "request", message,
             hint="resize the grid, lower t, or serve on a device with "
@@ -361,8 +388,14 @@ class SolveServer:
         Returns the number of launches performed (0 = fully drained).
         Slots freed by eviction are refilled from the bucket queue
         *before* the next block, so a long queue streams through a fixed
-        set of slots.
+        set of slots. Each block launch runs under a ``serve.block`` span
+        (bucket identity, active slots, queue depth; max residual and
+        evictions set at exit) and feeds the ``serve.*`` gauges/counters.
         """
+        with self._obs():
+            return self._step()
+
+    def _step(self) -> int:
         launches = 0
         for bucket in self._buckets.values():
             if not bucket.busy:
@@ -370,25 +403,43 @@ class SolveServer:
             self._fill_slots(bucket)
             if bucket.active == 0:
                 continue
-            us, residuals = bucket.block(bucket.us)
-            res = np.asarray(residuals)   # forces the launch
-            bucket.us = us
-            bucket.launches += 1
-            launches += 1
-            for i, req in enumerate(bucket.slots):
-                if req is None:
-                    continue
-                req.blocks_done += 1
-                req.iters_done = req.blocks_done * bucket.key.t
-                req.residual = float(res[i])
-                if req.stream is not None:
-                    iterate = (np.asarray(us[i]) if req.stream_iterates
-                               else None)
-                    req.stream(req, SolveProgress(req.iters_done,
-                                                  req.residual, iterate))
-                converged = req.tol is not None and req.residual <= req.tol
-                if converged or req.blocks_done >= req.target_blocks:
-                    self._evict(bucket, i, converged)
+            with _obs_span("serve.block", bucket=bucket.key.describe(),
+                           launch=bucket.launches, active=bucket.active,
+                           queue=len(bucket.queue)) as sp:
+                us, residuals = bucket.block(bucket.us)
+                res = np.asarray(residuals)   # forces the launch
+                bucket.us = us
+                bucket.launches += 1
+                launches += 1
+                evicted = 0
+                max_residual = 0.0
+                for i, req in enumerate(bucket.slots):
+                    if req is None:
+                        continue
+                    req.blocks_done += 1
+                    req.iters_done = req.blocks_done * bucket.key.t
+                    req.residual = float(res[i])
+                    max_residual = max(max_residual, req.residual)
+                    if req.stream is not None:
+                        iterate = (np.asarray(us[i]) if req.stream_iterates
+                                   else None)
+                        req.stream(req, SolveProgress(req.iters_done,
+                                                      req.residual, iterate))
+                    converged = (req.tol is not None
+                                 and req.residual <= req.tol)
+                    if converged or req.blocks_done >= req.target_blocks:
+                        self._evict(bucket, i, converged)
+                        evicted += 1
+                sp.set(max_residual=max_residual, evicted=evicted)
+            if evicted:
+                _metrics.counter("serve.evictions").inc(evicted)
+            _metrics.gauge("serve.active_slots").set(bucket.active)
+            _metrics.gauge("serve.queue_depth").set(len(bucket.queue))
+            _metrics.gauge("serve.max_residual").set(max_residual)
+            tracer = get_tracer()
+            if tracer is not None:
+                tracer.counter("serve.slots", {"active": bucket.active,
+                                               "queue": len(bucket.queue)})
         return launches
 
     @property

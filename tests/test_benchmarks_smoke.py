@@ -230,3 +230,9 @@ def test_bench_serve_checked_in_json_is_fresh():
     assert agg["evicted_early"] > 0
     assert agg["server_s"] < agg["one_at_a_time_s"]
     assert agg["served_p50_ms"] < agg["solo_p50_ms"]
+    # Tail percentiles come from the obs.metrics histogram summary now
+    # (one percentile implementation repo-wide) and must be ordered.
+    assert agg["percentile_source"] == "obs.metrics"
+    assert agg["solo_p99_ms"] >= agg["solo_p95_ms"] >= agg["solo_p50_ms"] > 0
+    assert agg["served_p99_ms"] >= agg["served_p95_ms"] \
+        >= agg["served_p50_ms"] > 0
