@@ -9,9 +9,18 @@ requests, more requests than slots) is run two ways —
   request at its *fixed* ``max_iters``, sequential. No residual check, so
   every request pays its full iteration budget even after converging.
 * **served**: every request through :class:`repro.serve.SolveServer` —
-  admission, bucketing, one vmapped launch per block of ``t`` sweeps,
-  per-slot in-launch residuals, and mid-flight eviction of converged
-  solves (freed slots immediately refill from the queue).
+  admission, bucketing, superblock launches (up to ``SUPERBLOCK`` blocks
+  of ``t`` sweeps per launch, per-slot residual/convergence flags
+  accumulated in-launch, ONE host sync per superblock), and mid-flight
+  eviction of converged solves (freed slots immediately refill from the
+  queue).
+
+Two satellite sections ride along: ``single_request`` times a lone
+request through the server's ``run_converged`` bypass against a bare
+jitted ``engine.run`` at the same sweep count (the served/solo ratio is
+the single-request serving overhead), and ``async_arrivals`` times
+mid-flight admission — half the bucket's traffic submitted between
+superblocks rather than up front.
 
 The speedup is dominated by eviction (converged solves stop paying
 sweeps), which is the point: the server turns "fixed ``iters``" into
@@ -37,6 +46,7 @@ from repro.obs import metrics as _metrics
 DTYPE = "float32"
 T = 64             # block cadence: sweeps per launch / residual check
 MAX_SLOTS = 8
+SUPERBLOCK = 4     # blocks advanced per launch (one host sync each)
 REPEATS = 3        # min-of-N timing for both passes (noise floor)
 
 # Mixed traffic: (name, interior shape, policy, tol, max_iters).  Two
@@ -159,7 +169,7 @@ def _measure_served() -> tuple[float, list[float], list, dict]:
     spec = jacobi_2d_5pt()
 
     def build():
-        srv = SolveServer(max_slots=MAX_SLOTS)
+        srv = SolveServer(max_slots=MAX_SLOTS, superblock=SUPERBLOCK)
         reqs = [SolveRequest(grid=_problem(shape), spec=spec, tol=tol,
                              max_iters=max_iters, policy=policy, t=T)
                 for _name, shape, policy, tol, max_iters in WORKLOAD]
@@ -176,6 +186,101 @@ def _measure_served() -> tuple[float, list[float], list, dict]:
         if best is None or total < best[0]:
             best = (total, [r.latency_s for r in reqs], reqs, srv.stats())
     return best
+
+
+def _measure_single() -> dict:
+    """A lone request through the server vs one solo launch at the same
+    realized sweep count.
+
+    The server routes it through the ``run_converged`` bypass (no vmap
+    lane, no slot-history replay), so total serving cost — admission,
+    bucketing, the while_loop launch, eviction — must stay within a
+    small factor of the bare jitted ``engine.run``.
+    """
+    import jax
+
+    from repro import engine
+    from repro.core.stencil import jacobi_2d_5pt
+    from repro.serve import SolveRequest, SolveServer
+
+    name, shape, policy, tol, max_iters = WORKLOAD[0]
+    realized = _realized_sweeps(shape, tol, max_iters)
+    spec = jacobi_2d_5pt()
+    u = _problem(shape)
+    reps = max(REPEATS, 10)    # ms-scale launches: need a tight floor
+    fn = jax.jit(lambda v: engine.run(v, spec, policy=policy,
+                                      iters=realized, t=T, interpret=True))
+    jax.block_until_ready(fn(u))
+    solo = min(_timed(lambda: jax.block_until_ready(fn(u)))
+               for _ in range(reps))
+
+    def served_once():
+        srv = SolveServer(max_slots=MAX_SLOTS, superblock=SUPERBLOCK)
+        req = SolveRequest(grid=_problem(shape), spec=spec, tol=tol,
+                           max_iters=max_iters, policy=policy, t=T)
+        dt = _timed(lambda: srv.solve([req]))
+        assert req.iters_done == realized, (req.iters_done, realized)
+        return dt, srv.stats()["launches"]
+
+    served_once()              # warm the cached while_loop launch
+    served, launches = min(served_once() for _ in range(reps))
+    return {"request": name, "realized_sweeps": realized,
+            "launches": launches, "solo_ms": solo * 1e3,
+            "served_ms": served * 1e3, "served_over_solo": served / solo}
+
+
+def _measure_async() -> dict:
+    """Mid-flight admission: half the bucket's traffic arrives between
+    superblocks (``submit()`` interleaved with ``step()``), not up
+    front. The server admits late requests at the next superblock
+    boundary into slots freed by eviction."""
+    from repro.core.stencil import jacobi_2d_5pt
+    from repro.serve import SolveRequest, SolveServer
+
+    spec = jacobi_2d_5pt()
+    cases = [w for w in WORKLOAD if w[1] == (128, 128)][:8]
+
+    def build():
+        srv = SolveServer(max_slots=MAX_SLOTS, superblock=SUPERBLOCK)
+        reqs = [SolveRequest(grid=_problem(shape), spec=spec, tol=tol,
+                             max_iters=max_iters, policy=policy, t=T)
+                for _name, shape, policy, tol, max_iters in cases]
+        return srv, reqs
+
+    srv, reqs = build()        # warm pass
+    srv.solve(reqs)
+    best = None
+    for _ in range(REPEATS):
+        srv, reqs = build()
+        early, late = reqs[:4], reqs[4:]
+        t0 = time.perf_counter()
+        for r in early:
+            srv.submit(r)
+        srv.step()             # in flight before any late arrival
+        for r in late:         # arrivals between superblocks
+            srv.submit(r)
+            srv.step()
+        srv.drain()
+        total = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        if best is None or total < best[0]:
+            best = (total, [r.latency_s for r in late], srv.stats())
+    total, late_lat, stats = best
+    late_sum = _latency_summary("bench.serve.async_late_latency_s",
+                                late_lat)
+    return {"n_initial": len(reqs) - len(late_lat),
+            "n_late": len(late_lat), "total_s": total,
+            "served_requests_per_s": len(reqs) / total,
+            "late_p50_ms": late_sum["p50"] * 1e3,
+            "late_p95_ms": late_sum["p95"] * 1e3,
+            "launches": stats["launches"],
+            "evicted_early": stats["evicted_early"]}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def collect() -> dict:
@@ -201,9 +306,19 @@ def collect() -> dict:
     }
     agg["sweeps_saved_frac"] = 1.0 - (agg["realized_sweeps"]
                                       / agg["fixed_sweeps"])
+    single = {"request": WORKLOAD[0][0],
+              "realized_sweeps": _realized_sweeps(
+                  WORKLOAD[0][1], WORKLOAD[0][3], WORKLOAD[0][4]),
+              "launches": 0, "solo_ms": 0.0, "served_ms": 0.0,
+              "served_over_solo": 0.0}
+    async_ = {"n_initial": 4, "n_late": 4, "total_s": 0.0,
+              "served_requests_per_s": 0.0, "late_p50_ms": 0.0,
+              "late_p95_ms": 0.0, "launches": 0, "evicted_early": 0}
     if not dry_run():
         solo_s, solo_lat = _measure_solo()
         served_s, served_lat, reqs, stats = _measure_served()
+        single = _measure_single()
+        async_ = _measure_async()
         solo_sum = _latency_summary("bench.serve.solo_latency_s", solo_lat)
         served_sum = _latency_summary("bench.serve.served_latency_s",
                                       served_lat)
@@ -227,7 +342,8 @@ def collect() -> dict:
             "evicted_early": stats["evicted_early"],
             "buckets": stats["buckets"],
         })
-    return {"rows": rows, "aggregate": agg}
+    return {"rows": rows, "aggregate": agg, "single_request": single,
+            "async_arrivals": async_}
 
 
 def run(data: dict | None = None) -> list[str]:
@@ -247,6 +363,18 @@ def run(data: dict | None = None) -> list[str]:
         f"speedup={agg['speedup']:.2f};"
         f"sweeps={agg['realized_sweeps']}/{agg['fixed_sweeps']};"
         f"evicted_early={agg['evicted_early']}"))
+    single = data["single_request"]
+    out.append(row(
+        "serve_single_request", single["served_ms"] * 1e3,
+        f"solo_ms={single['solo_ms']:.1f};"
+        f"ratio={single['served_over_solo']:.2f};"
+        f"launches={single['launches']}"))
+    asy = data["async_arrivals"]
+    out.append(row(
+        "serve_async_arrivals", asy["total_s"] * 1e6,
+        f"late={asy['n_late']};"
+        f"late_p50_ms={asy['late_p50_ms']:.1f};"
+        f"launches={asy['launches']}"))
     return out
 
 
@@ -257,9 +385,12 @@ def write_json(out_path: str, data: dict | None = None) -> dict:
         "dtype": DTYPE,
         "t": T,
         "max_slots": MAX_SLOTS,
+        "superblock": SUPERBLOCK,
         "dry": dry_run(),
         "rows": data["rows"],
         "aggregate": data["aggregate"],
+        "single_request": data["single_request"],
+        "async_arrivals": data["async_arrivals"],
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

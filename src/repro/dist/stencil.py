@@ -118,20 +118,25 @@ def _assemble_ext(u, top, bottom, left, right, tl, tr, bl, br, *,
     ix, iy = _shard_index(row_axis, col_axis, px, py)
 
     # Phase 1 — row halos; Dirichlet bands on physical top/bottom edges.
-    uh, dh = exchange_rows(u, row_axis, px, d)
+    # The left/right Dirichlet bands span the halo rows too (their values
+    # live on the row neighbours), so they ride the SAME ppermute pair as
+    # the grid: one packed ``[left | grid | right]`` row exchange instead
+    # of three separate ones (6 collectives per round down to 2). Slicing
+    # the packed halos back apart commutes with the permute, so the
+    # result is bit-identical to exchanging the three operands alone.
+    lb, rb = left.astype(u.dtype), right.astype(u.dtype)  # (hl, r)
+    packed = jnp.concatenate([lb, u, rb], axis=1)         # (hl, wl+2r)
+    ph, pd = exchange_rows(packed, row_axis, px, d)       # (d, wl+2r)
+    uh, dh = ph[:, r:r + wl], pd[:, r:r + wl]
     top_b = _pad_outward(top.astype(u.dtype), d, axis=0, leading=True)
     bot_b = _pad_outward(bottom.astype(u.dtype), d, axis=0, leading=False)
     uh = jnp.where(ix == 0, top_b, uh)
     dh = jnp.where(ix == px - 1, bot_b, dh)
     ext_r = jnp.concatenate([uh, u, dh], axis=0)          # (hl+2d, wl)
 
-    # Left/right Dirichlet bands span the halo rows too (their values live
-    # on the row neighbours) — extend them through the same row exchange.
-    lb, rb = left.astype(u.dtype), right.astype(u.dtype)  # (hl, r)
-    lt, lbot = exchange_rows(lb, row_axis, px, d)
-    rt, rbot = exchange_rows(rb, row_axis, px, d)
-    left_ext = jnp.concatenate([lt, lb, lbot], axis=0)    # (hl+2d, r)
-    right_ext = jnp.concatenate([rt, rb, rbot], axis=0)
+    left_ext = jnp.concatenate([ph[:, :r], lb, pd[:, :r]], axis=0)
+    right_ext = jnp.concatenate([ph[:, r + wl:], rb, pd[:, r + wl:]],
+                                axis=0)                   # (hl+2d, r)
 
     # Phase 2 — column halos of the row-extended block (corner transport).
     lh, rh = exchange_cols(ext_r, col_axis, py, d)        # (hl+2d, d)
@@ -364,7 +369,8 @@ def _obs_host_active(u) -> bool:
 
 def _run_sharded_traced(u, interior, bc, spec: StencilSpec, mesh,
                         block: Callable, *, schedule, row_axis, col_axis,
-                        remainder_block, bill, remainder_bill):
+                        remainder_block, bill, remainder_bill,
+                        cache_key=None):
     """Span-per-phase twin of the serial body of :func:`run_sharded`.
 
     Each round runs as separate jitted phase launches with
@@ -419,19 +425,76 @@ def _run_sharded_traced(u, interior, bc, spec: StencilSpec, mesh,
                     interior = jax.block_until_ready(steps["compute"](ext))
         return interior
 
+    def steps_for(blk, t, tag):
+        # Reuse jitted phase callables across calls when the caller pinned
+        # how `blk` was built — otherwise every traced run would recompile
+        # all four phases and the spans would price compilation forever.
+        if cache_key is None:
+            return make_phase_steps(mesh, spec, blk, row_axis=row_axis,
+                                    col_axis=col_axis, t=t)
+        key = (cache_key, mesh, spec, row_axis, col_axis, t, tag,
+               tuple(interior.shape), str(interior.dtype))
+        steps = _PHASE_STEPS.get(key)
+        if steps is None:
+            steps = make_phase_steps(mesh, spec, blk, row_axis=row_axis,
+                                     col_axis=col_axis, t=t)
+            _PHASE_STEPS[key] = steps
+        return steps
+
     if schedule.fused_blocks:
-        steps = make_phase_steps(mesh, spec, block, row_axis=row_axis,
-                                 col_axis=col_axis, t=schedule.t)
+        steps = steps_for(block, schedule.t, "fused")
         for i in range(schedule.fused_blocks):
             interior = run_round(interior, steps, schedule.t, bill, i)
     if schedule.remainder:
-        steps_rem = make_phase_steps(
-            mesh, spec, remainder_block if remainder_block is not None
-            else block, row_axis=row_axis, col_axis=col_axis,
-            t=schedule.remainder)
+        steps_rem = steps_for(
+            remainder_block if remainder_block is not None else block,
+            schedule.remainder, "remainder")
         interior = run_round(interior, steps_rem, schedule.remainder,
                              remainder_bill, schedule.fused_blocks)
     return u.at[r:-r, r:-r].set(interior)
+
+
+def _execute_rounds(u, spec: StencilSpec, mesh, block: Callable, *,
+                    schedule, row_axis, col_axis, remainder_block):
+    """The untraced executor body: band split, ``lax.scan`` over fused
+    exchange rounds, remainder round, ring re-attach. Shared verbatim by
+    the eager fallback and the cached jitted single launch, so the two
+    are the same program by construction."""
+    r = spec.radius
+    interior, bc = split_ringed_bands(u, r)
+    bc = dict(bc, tl=u[:r, :r], tr=u[:r, -r:], bl=u[-r:, :r], br=u[-r:, -r:])
+    if schedule.fused_blocks:
+        step = make_sharded_step(mesh, spec, block, row_axis=row_axis,
+                                 col_axis=col_axis, t=schedule.t,
+                                 overlap=schedule.overlap)
+
+        def body(v, _):
+            return step(v, bc), None
+
+        interior, _ = jax.lax.scan(body, interior, None,
+                                   length=schedule.fused_blocks)
+    if schedule.remainder:
+        step_rem = make_sharded_step(
+            mesh, spec,
+            remainder_block if remainder_block is not None else block,
+            row_axis=row_axis, col_axis=col_axis, t=schedule.remainder,
+            overlap=schedule.overlap)
+        interior = step_rem(interior, bc)
+    return u.at[r:-r, r:-r].set(interior)
+
+
+# Cached jitted single launches for the untraced serial path, and cached
+# per-phase jitted callables for the traced executor — keyed by everything
+# that shaped the program (the caller's ``cache_key`` must pin whatever
+# produced ``block``). Bounded in practice by the handful of
+# (mesh, schedule) combinations a process runs.
+_SCAN_LAUNCHES: dict = {}
+_PHASE_STEPS: dict = {}
+
+
+def run_sharded_cache_clear() -> None:
+    _SCAN_LAUNCHES.clear()
+    _PHASE_STEPS.clear()
 
 
 def resolve_axes(mesh, row_axis: str | None, col_axis: str | None):
@@ -467,7 +530,8 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
                 schedule, row_axis: str | None = None,
                 col_axis: str | None = None,
                 remainder_block: Callable | None = None,
-                bill=None, remainder_bill=None) -> jax.Array:
+                bill=None, remainder_bill=None,
+                cache_key=None, donate: bool = False) -> jax.Array:
     """Execute a :class:`~repro.engine.schedule.SweepSchedule` over ``mesh``.
 
     ``schedule.fused_blocks`` exchanges of depth ``schedule.halo_depth``
@@ -485,6 +549,15 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
     ``compute``) span per phase. ``bill``/``remainder_bill`` are the
     per-round :class:`~repro.engine.schedule.ExchangeBill`\\ s those spans
     attach for ``obs.reconcile`` (None = spans carry no model attrs).
+
+    Called untraced with a hashable ``cache_key`` (anything that pins how
+    ``block``/``remainder_block`` were built — ``run_distributed`` passes
+    its policy/bm/interpret/device tuple), the whole body — band split,
+    every exchange round, remainder, ring re-attach — runs as ONE cached
+    jitted launch instead of one Python dispatch per round; ``donate``
+    additionally donates ``u``'s buffer to the launch (the caller's array
+    is invalid afterwards). Without a key, rounds dispatch eagerly as
+    before.
     """
     row_axis, col_axis = resolve_axes(mesh, row_axis, col_axis)
     r = spec.radius
@@ -493,30 +566,29 @@ def run_sharded(u: jax.Array, spec: StencilSpec, mesh, block: Callable, *,
     py = mesh.shape[col_axis] if col_axis else 1
     check_divisible(hi, wi, px, py)
 
-    interior, bc = split_ringed_bands(u, r)
-    bc = dict(bc, tl=u[:r, :r], tr=u[:r, -r:], bl=u[-r:, :r], br=u[-r:, -r:])
-
     if _obs_host_active(u):
+        interior, bc = split_ringed_bands(u, r)
+        bc = dict(bc, tl=u[:r, :r], tr=u[:r, -r:], bl=u[-r:, :r],
+                  br=u[-r:, -r:])
         return _run_sharded_traced(
             u, interior, bc, spec, mesh, block, schedule=schedule,
             row_axis=row_axis, col_axis=col_axis,
             remainder_block=remainder_block, bill=bill,
-            remainder_bill=remainder_bill)
+            remainder_bill=remainder_bill, cache_key=cache_key)
 
-    if schedule.fused_blocks:
-        step = make_sharded_step(mesh, spec, block, row_axis=row_axis,
-                                 col_axis=col_axis, t=schedule.t,
-                                 overlap=schedule.overlap)
+    if cache_key is not None and not isinstance(u, jax.core.Tracer):
+        key = (cache_key, mesh, spec, schedule, row_axis, col_axis,
+               tuple(u.shape), str(u.dtype), bool(donate))
+        fn = _SCAN_LAUNCHES.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                _execute_rounds, spec=spec, mesh=mesh, block=block,
+                schedule=schedule, row_axis=row_axis, col_axis=col_axis,
+                remainder_block=remainder_block),
+                donate_argnums=(0,) if donate else ())
+            _SCAN_LAUNCHES[key] = fn
+        return fn(u)
 
-        def body(v, _):
-            return step(v, bc), None
-
-        interior, _ = jax.lax.scan(body, interior, None,
-                                   length=schedule.fused_blocks)
-    if schedule.remainder:
-        step_rem = make_sharded_step(
-            mesh, spec, remainder_block if remainder_block is not None
-            else block, row_axis=row_axis, col_axis=col_axis,
-            t=schedule.remainder, overlap=schedule.overlap)
-        interior = step_rem(interior, bc)
-    return u.at[r:-r, r:-r].set(interior)
+    return _execute_rounds(u, spec, mesh, block, schedule=schedule,
+                           row_axis=row_axis, col_axis=col_axis,
+                           remainder_block=remainder_block)

@@ -68,6 +68,7 @@ from repro.engine.dispatch import (  # noqa: F401
     resolve_auto,
     run,
     run_batched,
+    run_converged,
     step,
 )
 from repro.engine.distributed import (  # noqa: F401

@@ -201,11 +201,173 @@ def residual_for(spec: StencilSpec | None = None) -> Callable:
     return functools.partial(residual, spec=spec)
 
 
+def _is_traced(u) -> bool:
+    """True when ``u`` is an abstract tracer (we are inside jit/vmap/scan).
+
+    The cached jitted launches below only apply to concrete host calls;
+    inside an outer trace the schedule is inlined so the enclosing jit
+    compiles one fused program (today's behavior, bit-identical).
+    """
+    return isinstance(u, jax.core.Tracer)
+
+
+def _block_fn(sched, spec: StencilSpec, bm, interpret, device) -> Callable:
+    """One ``t``-sweep fused block (or one sweep for unfused policies)."""
+    p = get_policy(sched.policy)
+    if p.fused:
+        return functools.partial(p.fn, spec=spec, bm=bm, t=sched.t,
+                                 interpret=interpret, device=device)
+    return functools.partial(p.fn, spec=spec, bm=bm, interpret=interpret,
+                             device=device)
+
+
+def _execute_schedule(u: jax.Array, sched, spec: StencilSpec, bm,
+                      interpret, device) -> jax.Array:
+    """Execute a frozen :class:`SweepSchedule` as kernel launches.
+
+    Shared verbatim by the inline (traced) path and the cached jitted
+    host launch, so both are the same XLA program by construction.
+    ``"reference"`` (the pure-jnp oracle, not a registry policy) runs
+    single un-fused sweeps — so every entry point built on this
+    (``run``, ``run_batched``, ``run_converged``, the solve server)
+    accepts the oracle uniformly."""
+    if sched.policy == "reference":
+        from repro.core.stencil import apply_stencil
+        return _scan_steps(u, functools.partial(apply_stencil, spec=spec),
+                           sched.iters)
+    p = get_policy(sched.policy)
+    if p.fused:
+        u = _scan_steps(u, _block_fn(sched, spec, bm, interpret, device),
+                        sched.fused_blocks)
+        if sched.remainder:
+            rp = get_policy(sched.remainder_policy)
+            u = _scan_steps(u, functools.partial(
+                rp.fn, spec=spec, bm=bm, interpret=interpret,
+                device=device), sched.remainder)
+        return u
+    return _scan_steps(u, functools.partial(
+        p.fn, spec=spec, bm=bm, interpret=interpret, device=device),
+        sched.iters)
+
+
+@functools.lru_cache(maxsize=256)
+def _launch_for(sched, spec: StencilSpec, bm, interpret, device,
+                donate: bool) -> Callable:
+    """Cached jitted whole-schedule launch: one dispatch per solve.
+
+    With ``donate=True`` the input grid's buffer is donated to XLA
+    (``donate_argnums``) so the sweep updates in place — the caller's
+    array is dead after the call."""
+    def go(u):
+        return _execute_schedule(u, sched, spec, bm, interpret, device)
+    return jax.jit(go, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=256)
+def _batched_launch_for(sched, spec: StencilSpec, bm, interpret, device,
+                        donate: bool) -> Callable:
+    def go(us):
+        return jax.vmap(lambda u: _execute_schedule(
+            u, sched, spec, bm, interpret, device))(us)
+    return jax.jit(go, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=256)
+def _converged_launch_for(sched, spec: StencilSpec, bm, interpret, device,
+                          max_blocks: int, donate: bool) -> Callable:
+    """Cached jitted tolerance-driven launch: ``lax.while_loop`` over
+    ``t``-sweep blocks with the in-launch residual as exit test.
+
+    ``sched`` is the one-block (cadence-``t``) schedule; the loop body
+    executes it whole, so non-fused policies advance ``t`` single sweeps
+    per residual check — the same block the solve server launches.
+    ``tol`` rides in as a traced operand (no retrace across tolerances);
+    ``tol < 0`` never triggers, so the sentinel ``-1.0`` means "run the
+    whole budget" (fixed-iteration semantics, residual still reported).
+    """
+    import jax.numpy as jnp
+
+    res_fn = residual_for(spec)
+
+    def block(v):
+        return _execute_schedule(v, sched, spec, bm, interpret, device)
+
+    def go(u, tol):
+        def cond(carry):
+            _, n, r = carry
+            return (n < max_blocks) & (r > tol)
+
+        def body(carry):
+            v, n, _ = carry
+            v = block(v)
+            return (v, n + 1, res_fn(v))
+
+        u, n, r = jax.lax.while_loop(
+            cond, body, (u, jnp.int32(0), jnp.float32(jnp.inf)))
+        return u, n, r
+
+    return jax.jit(go, donate_argnums=(0,) if donate else ())
+
+
+def run_converged(u: jax.Array, spec: StencilSpec | None = None, *,
+                  tol: float | None, max_iters: int, policy: str = "auto",
+                  bm: int | None = None, t: int | None = None,
+                  interpret: bool | None = None,
+                  device: str | DeviceModel | None = None,
+                  remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                  donate: bool = False
+                  ) -> tuple[jax.Array, int, float]:
+    """Advance ``u`` until the max-norm update delta is <= ``tol``,
+    checking every ``t``-sweep block *inside* one launch.
+
+    A single jitted ``lax.while_loop`` runs cadence-``t`` blocks and
+    evaluates :func:`residual_for` on-device, so tolerance-driven solves
+    exit without any host round-trip per block. Semantics match the
+    solve server's eviction rule exactly: the cadence is
+    ``effective_depth(max_iters, t)`` (the same rule bucket admission
+    uses), residuals are tested at block boundaries only, so realized
+    iterations are a multiple of the cadence and cap at
+    ``(max_iters // cadence) * cadence`` (the remainder sweeps a
+    fixed-``iters`` run would add never execute). ``tol=None`` runs the
+    whole (rounded) budget and still reports the final residual.
+
+    Returns ``(u, iters_done, residual)`` with ``iters_done``/``residual``
+    as host scalars — the terminal sync every converged solve needs once.
+    """
+    from repro.engine.schedule import effective_depth
+    spec = spec if spec is not None else jacobi_2d_5pt()
+    if interpret is None:
+        interpret = not _on_tpu()
+    device = _resolve_device_name(device)
+    if _is_traced(u):
+        raise PlanError("run_converged is a host entry point (its result "
+                        "shape is data-dependent); call it on concrete "
+                        "arrays, not under jit/vmap")
+    import jax.numpy as jnp
+    with _obs_span("engine.run_converged", max_iters=max_iters, tol=tol,
+                   shape=tuple(u.shape), requested_policy=policy) as sp:
+        cadence = effective_depth(max_iters, t)
+        sched = build_schedule(cadence, spec=spec, shape=u.shape,
+                               dtype=u.dtype, policy=policy, t=cadence,
+                               bm=bm, interpret=interpret, device=device,
+                               remainder_policy=remainder_policy)
+        max_blocks = max_iters // cadence
+        fn = _converged_launch_for(sched, spec, bm, interpret, device,
+                                   max_blocks, donate)
+        tol_arr = jnp.float32(-1.0 if tol is None else tol)
+        u, n, r = fn(u, tol_arr)
+        iters_done = int(n) * cadence
+        sp.set(policy=sched.policy, t=cadence, iters_done=iters_done,
+               residual=float(r), launch="while_loop")
+    return u, iters_done, float(r)
+
+
 def run_batched(us: jax.Array, spec: StencilSpec | None = None, *,
                 policy: str = "auto", iters: int = 1, bm: int | None = None,
                 t: int | None = None, interpret: bool | None = None,
                 device: str | DeviceModel | None = None,
-                remainder_policy: str = DEFAULT_REMAINDER_POLICY
+                remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+                donate: bool = False
                 ) -> jax.Array:
     """Advance a batch ``(B, H, W)`` of ringed grids ``iters`` sweeps each
     through ONE launch.
@@ -229,19 +391,33 @@ def run_batched(us: jax.Array, spec: StencilSpec | None = None, *,
         def one(u):
             return _scan_steps(u, functools.partial(apply_stencil,
                                                     spec=spec), iters)
-    else:
+        return jax.vmap(one)(us)
+    if _is_traced(us):
+        if donate:
+            raise PlanError("donate=True needs a concrete host array; "
+                            "inside jit the enclosing launch owns buffers")
         def one(u):
             return run(u, spec, policy=policy, iters=iters, bm=bm, t=t,
                        interpret=interpret, device=device,
                        remainder_policy=remainder_policy)
-    return jax.vmap(one)(us)
+        return jax.vmap(one)(us)
+    if interpret is None:
+        interpret = not _on_tpu()
+    device = _resolve_device_name(device)
+    sched = build_schedule(iters, spec=spec, shape=us.shape[1:],
+                           dtype=us.dtype, policy=policy, t=t, bm=bm,
+                           interpret=interpret, device=device,
+                           remainder_policy=remainder_policy)
+    return _batched_launch_for(sched, spec, bm, interpret, device,
+                               donate)(us)
 
 
 def run(u: jax.Array, spec: StencilSpec | None = None, *,
         policy: str = "auto", iters: int = 1, bm: int | None = None,
         t: int | None = None, interpret: bool | None = None,
         device: str | DeviceModel | None = None,
-        remainder_policy: str = DEFAULT_REMAINDER_POLICY) -> jax.Array:
+        remainder_policy: str = DEFAULT_REMAINDER_POLICY,
+        donate: bool = False) -> jax.Array:
     """Advance a ringed grid by exactly ``iters`` sweeps of ``spec``.
 
     ``policy`` is a registry name, ``"auto"`` (device-aware heuristic), or
@@ -252,6 +428,14 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
     blocks plus an ``iters % t`` remainder under ``remainder_policy`` — is
     all :func:`repro.engine.schedule.build_schedule`; this function just
     executes the schedule as kernel launches.
+
+    Called on a concrete array, the whole schedule runs as ONE cached
+    jitted launch (``lax.scan`` over fused blocks) — no per-block Python
+    dispatch. ``donate=True`` additionally donates the input buffer so
+    the sweep updates in place; the caller's array is invalid afterwards.
+    Under an enclosing jit/vmap trace the schedule inlines into the outer
+    program exactly as before (and ``donate`` is rejected — the outer
+    launch owns the buffers).
     """
     spec = spec if spec is not None else jacobi_2d_5pt()
     if interpret is None:
@@ -268,17 +452,11 @@ def run(u: jax.Array, spec: StencilSpec | None = None, *,
                                remainder_policy=remainder_policy)
         sp.set(policy=sched.policy, t=sched.t,
                fused_blocks=sched.fused_blocks, remainder=sched.remainder)
-        p = get_policy(sched.policy)
-        if p.fused:
-            u = _scan_steps(u, functools.partial(
-                p.fn, spec=spec, bm=bm, t=sched.t, interpret=interpret,
-                device=device), sched.fused_blocks)
-            if sched.remainder:
-                rp = get_policy(sched.remainder_policy)
-                u = _scan_steps(u, functools.partial(
-                    rp.fn, spec=spec, bm=bm, interpret=interpret,
-                    device=device), sched.remainder)
-            return u
-        return _scan_steps(u, functools.partial(
-            p.fn, spec=spec, bm=bm, interpret=interpret, device=device),
-            sched.iters)
+        if _is_traced(u):
+            if donate:
+                raise PlanError("donate=True needs a concrete host array; "
+                                "inside jit the enclosing launch owns "
+                                "buffers")
+            return _execute_schedule(u, sched, spec, bm, interpret, device)
+        sp.set(launch="scan")
+        return _launch_for(sched, spec, bm, interpret, device, donate)(u)

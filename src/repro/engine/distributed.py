@@ -156,7 +156,8 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
                     interpret: bool | None = None,
                     device: str | DeviceModel | None = None,
                     remainder_policy: str = DEFAULT_REMAINDER_POLICY,
-                    overlap: bool | None = None) -> jax.Array:
+                    overlap: bool | None = None,
+                    donate: bool = False) -> jax.Array:
     """Advance a ringed grid by ``iters`` sweeps of ``spec`` over ``mesh``.
 
     Same contract and return as ``engine.run`` (full grid, ring copied
@@ -173,6 +174,15 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
     ``engine.run``. ``overlap`` hides each exchange behind the shard's
     halo-independent interior compute (``None`` = let the schedule price
     it; the result is bit-identical either way).
+
+    Called untraced (the hot path), the whole solve — band split, every
+    exchange round as a ``lax.scan`` with the ``ppermute``\\ s inside the
+    scan body, remainder, ring re-attach — runs as ONE cached jitted
+    launch instead of one Python dispatch per round; ``donate=True``
+    additionally donates ``u``'s buffer so the solve updates in place
+    (the caller's array is invalid afterwards). With an obs tracer
+    installed, rounds run through the span-per-phase traced executor
+    instead (measurable, at per-phase dispatch cost).
     """
     from repro.dist import stencil as dstencil
 
@@ -215,7 +225,13 @@ def run_distributed(u: jax.Array, spec: StencilSpec | None = None, *,
                                     fused_blocks=0),
                 shard_shape=shard_shape, dtype=u.dtype, spec=spec,
                 device=device, mesh_shape=mesh_shape)
+    # Everything that shaped `block`/`remainder_block` beyond what the
+    # schedule already pins — so the jitted single launch can be reused
+    # across calls (a fresh closure is built per call, its program isn't).
+    cache_key = ("run_distributed", bm, interpret, device,
+                 remainder_policy)
     return dstencil.run_sharded(u, spec, mesh, block, schedule=sched,
                                 row_axis=row_axis, col_axis=col_axis,
                                 remainder_block=remainder_block,
-                                bill=bill, remainder_bill=remainder_bill)
+                                bill=bill, remainder_bill=remainder_bill,
+                                cache_key=cache_key, donate=donate)

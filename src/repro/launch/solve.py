@@ -66,10 +66,13 @@ def main():
                          "vmapped launch per block of t sweeps, and "
                          "residual-based eviction (with --tol)")
     ap.add_argument("--tol", type=float, default=None,
-                    help="residual tolerance for --serve: the server "
-                         "evicts the solve at the first block whose "
-                         "max-norm update delta is <= TOL instead of "
-                         "running all --iters sweeps")
+                    help="residual tolerance: stop at the first block of "
+                         "t sweeps whose max-norm update delta is <= TOL "
+                         "instead of running all --iters sweeps. With "
+                         "--serve the server evicts the solve; without it "
+                         "engine.run_converged runs the residual check "
+                         "inside one lax.while_loop launch (single "
+                         "device, jax backend)")
     ap.add_argument("--check", action="store_true",
                     help="verify against the single-device reference")
     ap.add_argument("--verify", action="store_true",
@@ -112,8 +115,9 @@ def _serve_progress(ev) -> None:
         return
     a = ev.attrs
     mr = a.get("max_residual")
-    print(f"[serve] block={a.get('launch', '?')} active={a.get('active')} "
-          f"queue={a.get('queue')} "
+    print(f"[serve] launch={a.get('launch', '?')} "
+          f"blocks={a.get('blocks', 1)}{' lone' if a.get('lone') else ''} "
+          f"active={a.get('active')} queue={a.get('queue')} "
           f"max_residual={'?' if mr is None else format(mr, '.3e')} "
           f"wall={ev.dur_us / 1e3:.1f}ms")
 
@@ -301,6 +305,42 @@ def _dispatch(args):
         policy = VERSION_TO_POLICY.get(args.kernel, args.kernel)
         if policy == "ref":
             policy = "reference"
+        if args.tol is not None:
+            # Tolerance-driven solve without the server: ONE cached
+            # lax.while_loop launch with the residual check in-launch
+            # (engine.run_converged) — no host round-trip per block.
+            t_fuse = args.t if args.t is not None else args.temporal
+            if args.verify and policy != "reference":
+                _verify(policy, t_fuse)
+            engine.run_converged(u0, tol=args.tol, max_iters=args.iters,
+                                 policy=policy, t=t_fuse,
+                                 device=device)  # compile
+            t0 = time.perf_counter()
+            out, iters_done, res = engine.run_converged(
+                u0, tol=args.tol, max_iters=args.iters, policy=policy,
+                t=t_fuse, device=device)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            result = np.asarray(out)[1:-1, 1:-1]
+            gpts = args.ny * args.nx * max(iters_done, 1) / dt / 1e9
+            print(f"kernel={args.kernel} tol={args.tol:g} "
+                  f"grid={args.ny}x{args.nx} "
+                  f"iters={iters_done}/{args.iters} (launch=while_loop)")
+            print(f"wall={dt:.3f}s  GPt/s={gpts:.3f}  "
+                  f"residual={res:.3e}  mean={result.mean():.6f}  "
+                  f"max={result.max():.6f}")
+            if args.check:
+                from repro.kernels import ref
+                want = u0
+                for _ in range(iters_done):
+                    want = ref.jacobi_step(want)
+                err = np.abs(result
+                             - np.asarray(want)[1:-1, 1:-1]).max()
+                print(f"max |err| vs reference at {iters_done} iters: "
+                      f"{err:.3e}")
+                assert err < (1e-4 if dtype == jnp.float32 else 5e-2), err
+                print("CHECK OK")
+            return
         if policy == "reference":
             from repro.core import jacobi as J
             run = jax.jit(lambda u: J.jacobi_run(u, args.iters))

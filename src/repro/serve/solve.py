@@ -14,11 +14,18 @@ request-level scheduling layer above the engine:
   resolved policy / block depth ``t`` / device) share a :class:`BucketKey`
   derived from that schedule. A bucket never mixes dtypes or specs:
   :func:`repro.analysis.check_bucket` gates every slot assignment.
-* **batched launch** — each bucket advances all its active slots ``t``
-  sweeps through ONE jitted :func:`repro.engine.run_batched` launch
-  (``vmap`` over the slot axis, bit-identical per lane to a solo
-  ``engine.run``), and the per-slot residual is computed inside the same
-  launch — no extra host round-trip per convergence check.
+* **superblock launch** — each bucket advances all its active slots up
+  to ``superblock`` blocks of ``t`` sweeps through ONE jitted launch
+  (``lax.scan`` over blocks of a ``vmap`` over the slot axis,
+  bit-identical per lane to a solo ``engine.run``); per-slot residuals
+  and convergence/budget flags accumulate *inside* the launch (a lane
+  that converges is frozen by ``jnp.where`` at its stopping block), so
+  one host sync replaces one per block. The slot tensor's buffer is
+  donated to each launch, and the residual/liveness history rides back
+  via an async device→host copy that overlaps the next bucket's launch.
+  A bucket holding one lone request (no queue, no stream) bypasses the
+  slot machinery entirely: one :func:`repro.engine.run_converged`
+  ``while_loop`` launch carries it to convergence at solo cost.
 * **eviction** — a slot whose residual reaches its request's ``tol`` (or
   whose iteration budget is spent) is evicted mid-flight and its slot is
   immediately refilled from the bucket's queue, ``serve/engine.py``
@@ -52,7 +59,8 @@ from repro.analysis import check_bucket, check_schedule
 from repro.analysis.diagnostics import Report, error
 from repro.core.stencil import StencilSpec, jacobi_2d_5pt
 from repro.engine.device import DeviceModel, get_device
-from repro.engine.dispatch import residual_for, run_batched
+from repro.engine.dispatch import (residual_for, run, run_batched,  # noqa: F401
+                                   run_converged)
 from repro.engine.plan import PlanError
 from repro.engine.schedule import build_schedule, effective_depth
 from repro.obs import metrics as _metrics
@@ -148,12 +156,16 @@ class SolveRequest:
 
 
 class _Bucket:
-    """One batch lane-set: slots, queue, and the jitted block launcher."""
+    """One batch lane-set: slots, queue, and per-bucket counters.
 
-    def __init__(self, key: BucketKey, max_slots: int, block_fn):
+    The jitted superblock launcher is resolved per step via
+    :func:`_superblock_for` (the block count ``k`` varies with the
+    remaining work), so the bucket itself holds no launch closure.
+    """
+
+    def __init__(self, key: BucketKey, max_slots: int):
         self.key = key
         self.max_slots = max_slots
-        self.block = block_fn              # us -> (us', residuals)
         self.queue: collections.deque[SolveRequest] = collections.deque()
         self.slots: list[SolveRequest | None] = []
         self.us: jax.Array | None = None   # (S, H, W) slot tensor
@@ -187,26 +199,62 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-@functools.lru_cache(maxsize=64)
-def _block_for(key: BucketKey):
-    """One jitted launch: ``t`` sweeps for every slot + per-slot
-    residuals, computed on the advanced iterate inside the same launch
-    (the eviction check costs no extra host round-trip).
+def _tol_f32(tol: float) -> np.float32:
+    """The largest float32 <= ``tol``: makes the in-launch f32 comparison
+    ``residual <= tol32`` decide exactly like the host-side double
+    comparison ``float(residual) <= tol`` for every f32 residual."""
+    t32 = np.float32(tol)
+    if float(t32) > tol:
+        t32 = np.nextafter(t32, np.float32(-np.inf))
+    return t32
 
-    Memoized at module level on the frozen :class:`BucketKey`, so every
-    server instance serving the same bucket shares one jit cache — a
-    fresh ``SolveServer`` does not re-trace blocks an earlier one
-    already compiled.
+
+@functools.lru_cache(maxsize=64)
+def _superblock_for(key: BucketKey, k: int):
+    """One jitted launch advancing every slot up to ``k`` blocks of ``t``
+    sweeps, per-slot convergence/budget flags accumulated in-launch.
+
+    The ``lax.scan`` body advances the whole batch one block (``vmap``
+    over the slot axis — bit-identical per lane to a solo ``engine.run``)
+    and computes per-slot residuals inside the same launch; a lane that
+    has converged (``residual <= tol``) or spent its block budget is
+    *frozen*: ``jnp.where`` carries its iterate through unchanged, so its
+    final value is bit-exactly the iterate at its stopping block — the
+    same array a one-block-per-launch server would have evicted. The
+    residual history ``(k, S)`` plus per-block liveness flags return with
+    the launch so the host replays block-boundary events (streaming,
+    eviction accounting) after ONE sync per superblock instead of one
+    per block.
+
+    ``tol`` uses the ``-1.0`` sentinel for fixed-iteration requests
+    (residuals are >= 0, so it never triggers). The slot tensor's buffer
+    is donated — the server owns it and swaps in the launch result.
+
+    Memoized at module level on ``(key, k)``, so every server instance
+    serving the same bucket shares one jit cache.
     """
     res_fn = residual_for(key.spec)
 
-    def block(us):
-        vs = run_batched(us, key.spec, policy=key.policy,
-                         iters=key.t, t=key.t,
-                         interpret=key.interpret, device=key.device)
-        return vs, jax.vmap(res_fn)(vs)
+    def one_block(u):
+        return run(u, key.spec, policy=key.policy, iters=key.t, t=key.t,
+                   interpret=key.interpret, device=key.device)
 
-    return jax.jit(block)
+    def launch(us, conv0, n0, tols, budgets):
+        def body(carry, _):
+            us, n, conv = carry
+            live = (~conv) & (n < budgets)
+            vs = jax.vmap(one_block)(us)
+            res = jax.vmap(res_fn)(vs)
+            us = jnp.where(live[:, None, None], vs, us)
+            n = n + live.astype(n.dtype)
+            conv = conv | (live & (res <= tols))
+            return (us, n, conv), (res, live)
+
+        (us, n, conv), (hist_res, hist_live) = jax.lax.scan(
+            body, (us, n0, conv0), None, length=k)
+        return us, n, conv, hist_res, hist_live
+
+    return jax.jit(launch, donate_argnums=(0,))
 
 
 class SolveServer:
@@ -214,16 +262,25 @@ class SolveServer:
 
     ``max_slots`` caps each bucket's batch width (slot tensors grow in
     powers of two up to it, so the jit cache holds a handful of batch
-    shapes, not one per arrival count). ``device`` / ``interpret`` are
-    server-wide: one server plans and launches for one device model.
+    shapes, not one per arrival count). ``superblock`` caps how many
+    blocks of ``t`` sweeps one launch may advance a bucket: per-slot
+    convergence flags accumulate in-launch, so a 4-block superblock pays
+    one host sync where the one-block server paid four (convergence is
+    still decided at every block boundary — results are bit-identical).
+    Requests submitted between steps are admitted at the next superblock
+    boundary. ``device`` / ``interpret`` are server-wide: one server
+    plans and launches for one device model.
     """
 
-    def __init__(self, *, max_slots: int = 8,
+    def __init__(self, *, max_slots: int = 8, superblock: int = 4,
                  device: "str | DeviceModel | None" = None,
                  interpret: bool | None = None, tracer=None):
         if max_slots < 1:
             raise ValueError(f"max_slots={max_slots} must be >= 1")
+        if superblock < 1:
+            raise ValueError(f"superblock={superblock} must be >= 1")
         self.max_slots = int(max_slots)
+        self.superblock = int(superblock)
         self._device = (get_device(device).name
                         if isinstance(device, str) else device)
         self._interpret = (interpret if interpret is not None
@@ -301,8 +358,7 @@ class SolveServer:
         req.submitted_s = time.perf_counter()
         bucket = self._buckets.get(key)
         if bucket is None:
-            bucket = self._buckets[key] = _Bucket(
-                key, self.max_slots, _block_for(key))
+            bucket = self._buckets[key] = _Bucket(key, self.max_slots)
         bucket.admit(req, key.fields())
         _metrics.counter("serve.admitted").inc()
         return req
@@ -372,75 +428,203 @@ class SolveServer:
 
     def _evict(self, bucket: _Bucket, i: int, converged: bool) -> None:
         req = bucket.slots[i]
-        req.result = np.asarray(bucket.us[i])
+        bucket.slots[i] = None           # the slot is free immediately
+        self._finish(bucket, req, np.asarray(bucket.us[i]), converged)
+
+    def _finish(self, bucket: _Bucket, req: SolveRequest,
+                result: np.ndarray, converged: bool) -> None:
+        req.result = result
         req.converged = converged
         req.done = True
         req.finished_s = time.perf_counter()
-        bucket.slots[i] = None           # the slot is free immediately
         bucket.completed += 1
         if converged and req.blocks_done < req.target_blocks:
             bucket.evicted_early += 1
         self._completed.append(req)
 
     def step(self) -> int:
-        """Advance every busy bucket by one block of its cadence ``t``.
+        """Advance every busy bucket by one superblock (up to
+        ``superblock`` blocks of its cadence ``t``).
 
         Returns the number of launches performed (0 = fully drained).
         Slots freed by eviction are refilled from the bucket queue
-        *before* the next block, so a long queue streams through a fixed
-        set of slots. Each block launch runs under a ``serve.block`` span
-        (bucket identity, active slots, queue depth; max residual and
-        evictions set at exit) and feeds the ``serve.*`` gauges/counters.
+        *before* the next superblock, so a long queue streams through a
+        fixed set of slots, and requests submitted between steps join at
+        the next superblock boundary. Stepping is two-phase: every busy
+        bucket's launch is dispatched first (with an async copy of its
+        per-block residual/liveness history back to the host), then the
+        histories are replayed — block-boundary events for one bucket
+        overlap the next bucket's launch. A bucket whose only traffic is
+        a single lone request (one active slot, empty queue, no stream)
+        bypasses the slot machinery entirely: one ``run_converged``
+        launch carries it to convergence or budget in-launch. Each
+        launch runs under a ``serve.block`` span (bucket identity,
+        active slots, queue depth, block count; max residual and
+        evictions set at exit) and feeds the ``serve.*``
+        gauges/counters.
         """
         with self._obs():
             return self._step()
 
     def _step(self) -> int:
         launches = 0
+        pending = []
         for bucket in self._buckets.values():
             if not bucket.busy:
+                continue
+            if (bucket.active == 0 and len(bucket.queue) == 1
+                    and bucket.queue[0].stream is None):
+                # Fresh lone request: never touches the slot tensor.
+                launches += self._step_lone(bucket)
                 continue
             self._fill_slots(bucket)
             if bucket.active == 0:
                 continue
-            with _obs_span("serve.block", bucket=bucket.key.describe(),
-                           launch=bucket.launches, active=bucket.active,
-                           queue=len(bucket.queue)) as sp:
-                us, residuals = bucket.block(bucket.us)
-                res = np.asarray(residuals)   # forces the launch
-                bucket.us = us
-                bucket.launches += 1
-                launches += 1
-                evicted = 0
-                max_residual = 0.0
-                for i, req in enumerate(bucket.slots):
-                    if req is None:
-                        continue
-                    req.blocks_done += 1
-                    req.iters_done = req.blocks_done * bucket.key.t
-                    req.residual = float(res[i])
-                    max_residual = max(max_residual, req.residual)
-                    if req.stream is not None:
-                        iterate = (np.asarray(us[i]) if req.stream_iterates
-                                   else None)
-                        req.stream(req, SolveProgress(req.iters_done,
-                                                      req.residual, iterate))
-                    converged = (req.tol is not None
-                                 and req.residual <= req.tol)
-                    if converged or req.blocks_done >= req.target_blocks:
-                        self._evict(bucket, i, converged)
-                        evicted += 1
-                sp.set(max_residual=max_residual, evicted=evicted)
-            if evicted:
-                _metrics.counter("serve.evictions").inc(evicted)
-            _metrics.gauge("serve.active_slots").set(bucket.active)
-            _metrics.gauge("serve.queue_depth").set(len(bucket.queue))
-            _metrics.gauge("serve.max_residual").set(max_residual)
-            tracer = get_tracer()
-            if tracer is not None:
-                tracer.counter("serve.slots", {"active": bucket.active,
-                                               "queue": len(bucket.queue)})
+            lone = [r for r in bucket.slots if r is not None]
+            if (len(lone) == 1 and not bucket.queue
+                    and lone[0].stream is None):
+                launches += self._step_lone(bucket)
+                continue
+            launches += self._dispatch_superblock(bucket, pending)
+        for bucket, k, out, cm, sp in pending:
+            try:
+                self._replay(bucket, k, out, sp)
+            finally:
+                cm.__exit__(None, None, None)
         return launches
+
+    def _step_lone(self, bucket: _Bucket) -> int:
+        """Single-request bypass: no vmap lane, no slot-history replay.
+
+        ``run_converged`` advances the lone grid block-by-block inside
+        ONE ``lax.while_loop`` launch with the in-launch residual check
+        at the same ``t``-block cadence the batched path uses (``tol``
+        narrowed by :func:`_tol_f32` so the f32 in-launch comparison
+        decides exactly like the batched path's), so the request lands
+        bit-identically to slot serving at solo-``engine.run`` cost.
+        A fresh lone request (no slot occupied yet) runs straight off
+        ``req.grid`` — the slot tensor is never allocated or copied
+        into; a request left alone mid-flight resumes from its lane.
+        """
+        key = bucket.key
+        if bucket.active:
+            i = next(j for j, r in enumerate(bucket.slots)
+                     if r is not None)
+            req, u = bucket.slots[i], bucket.us[i]
+        else:
+            i, req = None, bucket.queue.popleft()
+            u = req.grid
+            bucket.peak_active = max(bucket.peak_active, 1)
+        remaining = req.target_blocks - req.blocks_done
+        tol = None if req.tol is None else float(_tol_f32(req.tol))
+        with _obs_span("serve.block", bucket=key.describe(),
+                       launch=bucket.launches, active=1, queue=0,
+                       blocks=remaining, lone=True) as sp:
+            v, iters, residual = run_converged(
+                u, key.spec, tol=tol,
+                max_iters=remaining * key.t, policy=key.policy, t=key.t,
+                interpret=key.interpret, device=key.device)
+            bucket.launches += 1
+            req.blocks_done += int(iters) // key.t
+            req.iters_done = req.blocks_done * key.t
+            req.residual = float(residual)
+            converged = req.tol is not None and req.residual <= req.tol
+            if i is not None:
+                bucket.slots[i] = None   # lane is stale; refills overwrite
+            self._finish(bucket, req, np.asarray(v), converged)
+            sp.set(max_residual=req.residual, evicted=1)
+        _metrics.counter("serve.evictions").inc(1)
+        _metrics.gauge("serve.active_slots").set(bucket.active)
+        _metrics.gauge("serve.queue_depth").set(len(bucket.queue))
+        _metrics.gauge("serve.max_residual").set(req.residual)
+        tracer = get_tracer()
+        if tracer is not None:
+            tracer.counter("serve.slots", {"active": bucket.active,
+                                           "queue": len(bucket.queue)})
+        return 1
+
+    def _dispatch_superblock(self, bucket: _Bucket, pending: list) -> int:
+        """Launch up to ``superblock`` blocks for one bucket; defer the
+        host-side replay until every bucket has dispatched."""
+        key = bucket.key
+        active = [r for r in bucket.slots if r is not None]
+        k = max(1, min(self.superblock,
+                       max(r.target_blocks - r.blocks_done
+                           for r in active)))
+        if any(r.stream_iterates for r in active):
+            # Streamed iterates are host copies at every block boundary;
+            # only a one-block launch exposes each boundary state.
+            k = 1
+        n_slots = len(bucket.slots)
+        conv0 = np.zeros(n_slots, bool)
+        n0 = np.zeros(n_slots, np.int32)
+        tols = np.full(n_slots, -1.0, np.float32)  # sentinel: never fires
+        budgets = np.zeros(n_slots, np.int32)
+        for i, r in enumerate(bucket.slots):
+            if r is None:
+                conv0[i] = True            # empty lanes stay frozen
+                continue
+            n0[i] = r.blocks_done
+            budgets[i] = r.target_blocks
+            if r.tol is not None:
+                tols[i] = _tol_f32(r.tol)
+        cm = _obs_span("serve.block", bucket=key.describe(),
+                       launch=bucket.launches, active=bucket.active,
+                       queue=len(bucket.queue), blocks=k)
+        sp = cm.__enter__()
+        out = _superblock_for(key, k)(
+            bucket.us, jnp.asarray(conv0), jnp.asarray(n0),
+            jnp.asarray(tols), jnp.asarray(budgets))
+        bucket.us = out[0]                 # the old buffer was donated
+        for arr in out[1:]:
+            if hasattr(arr, "copy_to_host_async"):
+                arr.copy_to_host_async()   # readback overlaps next launch
+        bucket.launches += 1
+        pending.append((bucket, k, out, cm, sp))
+        return 1
+
+    def _replay(self, bucket: _Bucket, k: int, out, sp) -> None:
+        """Replay one superblock's per-block history on the host:
+        streaming callbacks, iteration accounting, and eviction — the
+        same block-boundary events a one-block-per-launch server fires,
+        reconstructed from the launch's ``(k, S)`` residual/liveness
+        history after a single sync."""
+        _, _, conv, hist_res, hist_live = out
+        conv_arr = np.asarray(conv)
+        hres = np.asarray(hist_res)
+        hlive = np.asarray(hist_live)
+        t = bucket.key.t
+        evicted = 0
+        max_residual = 0.0
+        for i, req in enumerate(list(bucket.slots)):
+            if req is None:
+                continue
+            for j in range(k):
+                if not hlive[j, i]:
+                    continue
+                req.blocks_done += 1
+                req.iters_done = req.blocks_done * t
+                req.residual = float(hres[j, i])
+                max_residual = max(max_residual, req.residual)
+                if req.stream is not None:
+                    iterate = (np.asarray(bucket.us[i])
+                               if req.stream_iterates else None)
+                    req.stream(req, SolveProgress(req.iters_done,
+                                                  req.residual, iterate))
+            converged = bool(conv_arr[i])
+            if converged or req.blocks_done >= req.target_blocks:
+                self._evict(bucket, i, converged)
+                evicted += 1
+        sp.set(max_residual=max_residual, evicted=evicted)
+        if evicted:
+            _metrics.counter("serve.evictions").inc(evicted)
+        _metrics.gauge("serve.active_slots").set(bucket.active)
+        _metrics.gauge("serve.queue_depth").set(len(bucket.queue))
+        _metrics.gauge("serve.max_residual").set(max_residual)
+        tracer = get_tracer()
+        if tracer is not None:
+            tracer.counter("serve.slots", {"active": bucket.active,
+                                           "queue": len(bucket.queue)})
 
     @property
     def busy(self) -> bool:

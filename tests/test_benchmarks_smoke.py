@@ -102,6 +102,14 @@ def test_bench_dist_dry_rows_and_json(tmp_path):
         assert rec["modeled_overlapped_us"] > 0
         assert rec["measured_serial_us"] == 0.0  # dry: no subprocess
         assert rec["measured_overlapped_us"] == 0.0
+        # The single-launch rewrite's improvement fields must exist even
+        # dry: frozen baselines are priced in, ratios stay 0.0 unmeasured.
+        assert rec["baseline_serial_us"] > 0
+        assert rec["baseline_overlapped_us"] > 0
+        assert rec["serial_speedup"] == 0.0
+        assert rec["overlapped_speedup"] == 0.0
+        assert rec["dispatch_overhead_us"] == 0.0
+        assert rec["reconcile"] == []
         if rec["overlap_wins"]:
             assert rec["modeled_overlapped_us"] < rec["modeled_serial_us"]
     assert any(rec["overlap_wins"] for rec in rows)
@@ -147,6 +155,21 @@ def test_bench_dist_checked_in_json_is_fresh():
             assert rec[key] == want[key], (rec["name"], key)
         for key in ("modeled_serial_us", "modeled_overlapped_us"):
             assert rec[key] == pytest.approx(want[key]), (rec["name"], key)
+        # The committed file must come from a live run and carry the
+        # single-launch improvement evidence per row.
+        assert rec["measured_serial_us"] > 0.0, rec["name"]
+        assert rec["measured_overlapped_us"] > 0.0, rec["name"]
+        assert rec["serial_speedup"] > 0.0, rec["name"]
+        assert rec["baseline_serial_us"] == \
+            bench_dist.BASELINE_PR9[rec["name"]][0]
+        assert rec["dispatch_overhead_us"] > 0.0, rec["name"]
+        assert rec["reconcile"], rec["name"]
+    # Acceptance: folding every exchange round into one scanned launch
+    # must at least halve the measured serial wall on most of the matrix.
+    big = [r for r in committed["rows"] if r["serial_speedup"] >= 2.0]
+    assert len(big) >= 3, \
+        [(r["name"], round(r["serial_speedup"], 2))
+         for r in committed["rows"]]
 
 
 def test_bench_serve_dry_rows_and_json(tmp_path):
@@ -174,6 +197,14 @@ def test_bench_serve_dry_rows_and_json(tmp_path):
     assert agg["realized_sweeps"] < agg["fixed_sweeps"]
     assert agg["sweeps_saved_frac"] > 0.5
     assert agg["speedup"] == 0.0  # dry
+    # Satellite sections exist even dry (timed fields zeroed): the lone
+    # request's oracle sweeps are still accounted, the async section
+    # keeps its shape.
+    single = data["single_request"]
+    assert single["realized_sweeps"] % bench_serve.T == 0
+    assert single["served_ms"] == 0.0 and single["launches"] == 0
+    asy = data["async_arrivals"]
+    assert asy["n_late"] > 0 and asy["total_s"] == 0.0
 
     payload = bench_serve.write_json(str(tmp_path / "BENCH_serve.json"),
                                      data)
@@ -182,14 +213,17 @@ def test_bench_serve_dry_rows_and_json(tmp_path):
     assert on_disk == json.loads(json.dumps(payload))
     assert on_disk["bench"] == "solve_serve"
     assert on_disk["dry"] is True
+    assert on_disk["superblock"] == bench_serve.SUPERBLOCK
 
     csv = bench_serve.run(data)
-    assert len(csv) == len(rows) + 1
+    assert len(csv) == len(rows) + 3
     for line in csv:
         parts = line.split(",")
         assert len(parts) == 3
         float(parts[1])
-    assert csv[-1].startswith("serve_aggregate,")
+    assert any(line.startswith("serve_aggregate,") for line in csv)
+    assert any(line.startswith("serve_single_request,") for line in csv)
+    assert any(line.startswith("serve_async_arrivals,") for line in csv)
 
 
 def test_bench_serve_checked_in_json_is_fresh():
@@ -213,6 +247,7 @@ def test_bench_serve_checked_in_json_is_fresh():
         "commit BENCH_serve.json from a live run, not a dry one"
     assert committed["t"] == bench_serve.T
     assert committed["max_slots"] == bench_serve.MAX_SLOTS
+    assert committed["superblock"] == bench_serve.SUPERBLOCK
     assert committed["dtype"] == bench_serve.DTYPE
 
     current = {r["name"]: r for r in bench_serve.collect()["rows"]}
@@ -236,3 +271,18 @@ def test_bench_serve_checked_in_json_is_fresh():
     assert agg["solo_p99_ms"] >= agg["solo_p95_ms"] >= agg["solo_p50_ms"] > 0
     assert agg["served_p99_ms"] >= agg["served_p95_ms"] \
         >= agg["served_p50_ms"] > 0
+
+    # Acceptance: a lone request must ride the bypass (exactly one
+    # launch, no slot machinery) and land within 1.3x of a solo
+    # engine.run at the same realized sweeps.
+    single = committed["single_request"]
+    assert single["launches"] == 1, single
+    assert single["served_ms"] > 0.0
+    assert single["served_over_solo"] <= 1.3, single["served_over_solo"]
+    assert single["served_ms"] <= 1.3 * single["solo_ms"]
+
+    # Requests arriving between superblocks must actually get served.
+    asy = committed["async_arrivals"]
+    assert asy["n_late"] > 0 and asy["total_s"] > 0.0
+    assert asy["launches"] > 0
+    assert asy["late_p95_ms"] >= asy["late_p50_ms"] > 0

@@ -1,0 +1,322 @@
+"""Device-resident hot loops: scanned launches, donation, in-launch
+convergence, and superblock serving.
+
+The contract under test: folding host-side Python loops into device-side
+control flow (``lax.scan`` block loops, ``lax.while_loop`` convergence,
+superblock serving) must be a pure *dispatch* optimization — every result
+stays bit-exact (fp32) against the host-looped/one-block-at-a-time
+equivalents, donation invalidates exactly the buffers it claims to, and
+iteration counts land where the host-loop oracle says they must.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.stencil import (
+    jacobi_2d_5pt,
+    laplace_2d_9pt,
+    make_laplace_problem,
+)
+from repro.engine.dispatch import get_policy
+from repro.engine.plan import PlanError
+from repro.serve import SolveRequest, SolveServer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _problem(h, w):
+    u = make_laplace_problem(h, w, dtype=jnp.float32)
+    return u.at[1:-1, 1:-1].set(
+        jax.random.uniform(jax.random.PRNGKey(7), (h, w)))
+
+
+# ------------------------------------------------- engine: scan vs loop
+
+
+@pytest.mark.parametrize("policy,t", [("reference", None), ("shifted", None),
+                                      ("rowchunk", None), ("temporal", 3),
+                                      ("auto", None)])
+def test_run_scanned_launch_matches_host_loop(policy, t):
+    """The single cached-scan launch == a host Python loop of the same
+    schedule's blocks == the inline-traced path, bit-for-bit."""
+    u = _problem(16, 24)
+    iters = 7  # prime-ish: exercises the fused remainder for temporal
+    got = np.asarray(engine.run(u, policy=policy, iters=iters, t=t,
+                                interpret=True))
+    # Host loop at the resolved schedule: one dispatch per block, the
+    # pre-scan behavior.
+    sched = engine.build_schedule(iters, spec=jacobi_2d_5pt(),
+                                  shape=u.shape, dtype=u.dtype,
+                                  policy=policy, t=t, interpret=True)
+    v = u
+    if sched.policy == "reference":
+        from repro.core.stencil import apply_stencil
+        for _ in range(iters):
+            v = apply_stencil(v, jacobi_2d_5pt())
+    elif get_policy(sched.policy).fused:
+        for _ in range(sched.fused_blocks):
+            v = engine.run(v, policy=sched.policy, iters=sched.t,
+                           t=sched.t, interpret=True)
+        if sched.remainder:
+            v = engine.run(v, policy=sched.remainder_policy,
+                           iters=sched.remainder, interpret=True)
+    else:
+        for _ in range(iters):
+            v = engine.step(v, policy=sched.policy, interpret=True)
+    np.testing.assert_array_equal(got, np.asarray(v))
+    # Inline under an enclosing jit: same XLA program by construction.
+    inline = jax.jit(lambda w: engine.run(w, policy=policy, iters=iters,
+                                          t=t, interpret=True))(u)
+    np.testing.assert_array_equal(got, np.asarray(inline))
+
+
+def test_run_batched_scanned_matches_traced():
+    us = jnp.stack([_problem(16, 16), _problem(16, 16) * 0.5])
+    got = np.asarray(engine.run_batched(us, policy="rowchunk", iters=4,
+                                        interpret=True))
+    inline = jax.jit(lambda w: engine.run_batched(
+        w, policy="rowchunk", iters=4, interpret=True))(us)
+    np.testing.assert_array_equal(got, np.asarray(inline))
+
+
+# ------------------------------------------------------------ donation
+
+
+def test_donated_run_deletes_input_and_matches():
+    u = _problem(16, 16)
+    want = np.asarray(engine.run(u, policy="rowchunk", iters=4,
+                                 interpret=True))
+    v = jnp.array(u)  # private copy to donate
+    got = engine.run(v, policy="rowchunk", iters=4, interpret=True,
+                     donate=True)
+    np.testing.assert_array_equal(want, np.asarray(got))
+    assert v.is_deleted()
+    with pytest.raises(RuntimeError):
+        np.asarray(v)
+
+
+def test_donate_under_jit_is_rejected():
+    u = _problem(16, 16)
+    with pytest.raises(PlanError, match="donate"):
+        jax.jit(lambda w: engine.run(w, policy="rowchunk", iters=2,
+                                     interpret=True, donate=True))(u)
+
+
+def test_non_donating_run_keeps_input_alive():
+    u = _problem(16, 16)
+    engine.run(u, policy="rowchunk", iters=2, interpret=True)
+    np.asarray(u)  # still readable: no implicit donation
+
+
+# ------------------------------------------------- in-launch convergence
+
+
+def _host_loop_converged(u, tol, max_iters, policy, t):
+    """The pre-while_loop oracle: one block per dispatch, residual pulled
+    to the host (double compare) after every block."""
+    from repro.engine.schedule import effective_depth
+    res_fn = engine.residual_for(jacobi_2d_5pt())
+    cadence = effective_depth(max_iters, t)
+    iters = 0
+    residual = float("inf")
+    for _ in range(max_iters // cadence):
+        u = engine.run(u, policy=policy, iters=cadence, t=cadence,
+                       interpret=True)
+        iters += cadence
+        residual = float(res_fn(u))
+        if tol is not None and residual <= tol:
+            break
+    return u, iters, residual
+
+
+@pytest.mark.parametrize("policy,t,tol", [("rowchunk", 8, 5e-2),
+                                          ("temporal", 8, 5e-2),
+                                          ("rowchunk", 8, None)])
+def test_run_converged_pins_host_loop_oracle(policy, t, tol):
+    u = _problem(16, 16)
+    got, iters, res = engine.run_converged(u, tol=tol, max_iters=96,
+                                           policy=policy, t=t,
+                                           interpret=True)
+    want, want_iters, want_res = _host_loop_converged(u, tol, 96, policy, t)
+    assert iters == want_iters
+    assert res == want_res
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if tol is not None:
+        assert res <= tol
+
+
+def test_run_converged_rounds_budget_to_cadence():
+    """max_iters not divisible by the cadence: the remainder sweeps a
+    fixed-iters run would add never execute (serve eviction semantics)."""
+    u = _problem(16, 16)
+    _, iters, _ = engine.run_converged(u, tol=None, max_iters=30,
+                                       policy="temporal", t=8,
+                                       interpret=True)
+    assert iters == 24  # 3 full blocks of 8; the 6-sweep remainder is cut
+
+
+def test_run_converged_rejects_traced_calls():
+    u = _problem(16, 16)
+    with pytest.raises(PlanError, match="concrete"):
+        jax.jit(lambda w: engine.run_converged(
+            w, tol=1e-3, max_iters=8, interpret=True))(u)
+
+
+# ------------------------------------------------- distributed scan path
+
+
+def test_distributed_scan_launch_matches_traced_and_oracle():
+    """Eager run_distributed (ONE cached scan-of-rounds launch) == the
+    same call under an enclosing jit (inline traced) == single-device
+    engine.run, across mesh shapes and halo depths."""
+    script = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core.stencil import jacobi_2d_5pt, make_laplace_problem
+
+u = make_laplace_problem(32, 48, dtype=jnp.float32)
+u = u.at[1:-1, 1:-1].set(jax.random.uniform(jax.random.PRNGKey(0), (32, 48)))
+ITERS = 6
+failures = 0
+want = np.asarray(engine.run(u, policy="rowchunk", iters=ITERS))
+for mesh_shape, axes in [((4,), ("x",)), ((2, 2), ("x", "y"))]:
+    mesh = jax.make_mesh(mesh_shape, axes)
+    for t in (1, 3):
+        eager = np.asarray(engine.run_distributed(
+            u, mesh=mesh, policy="rowchunk", iters=ITERS, t=t))
+        traced = np.asarray(jax.jit(lambda w: engine.run_distributed(
+            w, mesh=mesh, policy="rowchunk", iters=ITERS, t=t))(u))
+        ok = (eager == want).all() and (traced == want).all()
+        print(("ok   " if ok else "FAIL ") + f"mesh={mesh_shape} t={t}")
+        failures += not ok
+print("FAILURES", failures)
+assert failures == 0
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# --------------------------------------------------- superblock serving
+
+
+def _serve(reqs, **kw):
+    srv = SolveServer(interpret=True, **kw)
+    srv.solve(reqs)
+    return srv
+
+
+def _workload():
+    return [
+        SolveRequest(grid=_problem(16, 16), tol=5e-2, max_iters=96,
+                     policy="temporal", t=8),
+        SolveRequest(grid=_problem(16, 16) * 0.5, tol=2.5e-2, max_iters=96,
+                     policy="temporal", t=8),
+        SolveRequest(grid=_problem(16, 16) * 0.25, tol=None, max_iters=24,
+                     policy="temporal", t=8),
+    ]
+
+
+def test_superblock_sizes_are_equivalent():
+    """superblock=1 (the one-block-per-launch server) and superblock=4
+    must produce identical results, residuals, and iteration counts —
+    the superblock only batches host syncs, never changes convergence."""
+    a = _workload()
+    b = _workload()
+    _serve(a, max_slots=4, superblock=1)
+    srv = _serve(b, max_slots=4, superblock=4)
+    for ra, rb in zip(a, b):
+        assert ra.iters_done == rb.iters_done
+        assert ra.residual == rb.residual
+        assert ra.converged == rb.converged
+        np.testing.assert_array_equal(ra.result, rb.result)
+    # Fewer host syncs: 3 lanes x up to 12 blocks in <= a few launches.
+    assert srv.stats()["launches"] <= 4
+
+
+def test_superblock_lane_matches_solo_run():
+    reqs = _workload()
+    _serve(reqs, max_slots=4, superblock=4)
+    for req in reqs:
+        solo = engine.run(jnp.asarray(req.grid), policy=req.key.policy,
+                          iters=req.iters_done, t=req.key.t,
+                          interpret=True)
+        np.testing.assert_array_equal(req.result, np.asarray(solo))
+        if req.tol is not None:
+            assert req.converged and req.residual <= req.tol
+
+
+def test_lone_request_bypasses_slot_machinery():
+    """A bucket with one active request, no queue, no stream goes through
+    ONE run_converged launch — and still matches slot-serving exactly."""
+    req = SolveRequest(grid=_problem(16, 16), tol=3e-2, max_iters=96,
+                       policy="temporal", t=8)
+    srv = _serve([req], max_slots=4, superblock=4)
+    assert srv.stats()["launches"] == 1  # while_loop, not one-per-block
+    twin = SolveRequest(grid=_problem(16, 16), tol=3e-2, max_iters=96,
+                        policy="temporal", t=8)
+    # Forcing a stream callback disables the bypass -> slot machinery.
+    seen = []
+    twin.stream = lambda r, p: seen.append(p.iters_done)
+    _serve([twin], max_slots=4, superblock=4)
+    assert req.iters_done == twin.iters_done
+    assert req.residual == twin.residual
+    np.testing.assert_array_equal(req.result, twin.result)
+    assert seen == sorted(seen) and seen[-1] == twin.iters_done
+
+
+def test_async_admission_between_superblocks():
+    """Requests submitted mid-flight join at the next superblock boundary
+    and still land bit-exact at a cadence-multiple iteration count."""
+    srv = SolveServer(max_slots=4, superblock=2, interpret=True)
+    first = _workload()[:2]
+    for r in first:
+        srv.submit(r)
+    srv.step()  # in-flight: both lanes advanced one superblock
+    late = SolveRequest(grid=_problem(16, 16) * 0.75, tol=4e-2,
+                        max_iters=96, policy="temporal", t=8)
+    srv.submit(late)
+    reqs = srv.drain()
+    assert {id(r) for r in reqs} == {id(r) for r in first + [late]}
+    for req in first + [late]:
+        assert req.done and req.iters_done % 8 == 0
+        solo = engine.run(jnp.asarray(req.grid), policy=req.key.policy,
+                          iters=req.iters_done, t=req.key.t,
+                          interpret=True)
+        np.testing.assert_array_equal(req.result, np.asarray(solo))
+
+
+def test_serve_reference_policy_round_trips():
+    """policy="reference" flows through the superblock and lone paths
+    (run/run_converged accept the oracle policy uniformly)."""
+    from repro.core.stencil import apply_stencil
+    req = SolveRequest(grid=_problem(12, 12), tol=None, max_iters=6,
+                       policy="reference", t=3)
+    _serve([req], max_slots=2, superblock=4)
+    want = jnp.asarray(req.grid)
+    for _ in range(req.iters_done):
+        want = apply_stencil(want, jacobi_2d_5pt())
+    assert req.iters_done == 6
+    np.testing.assert_array_equal(req.result, np.asarray(want))
+
+
+def test_nine_point_spec_serves_bit_exact_superblocked():
+    req = SolveRequest(grid=_problem(16, 16), spec=laplace_2d_9pt(),
+                       tol=1.5e-3, max_iters=96, policy="rowchunk", t=8)
+    mate = SolveRequest(grid=_problem(16, 16) * 0.5, spec=laplace_2d_9pt(),
+                        tol=1.5e-3, max_iters=96, policy="rowchunk", t=8)
+    _serve([req, mate], max_slots=4, superblock=4)
+    for r in (req, mate):
+        solo = engine.run(jnp.asarray(r.grid), laplace_2d_9pt(),
+                          policy=r.key.policy, iters=r.iters_done,
+                          t=r.key.t, interpret=True)
+        np.testing.assert_array_equal(r.result, np.asarray(solo))
